@@ -1,0 +1,89 @@
+"""Paper §III-B (Figs 6-9): ResNet-18/ImageNet sharing sweep.
+
+12 training tasks at NPPN ∈ {1,2,4,6} (the paper's concurrency ladder).
+Reduced resolution/width keep the CPU wall-time sane; the measured
+quantities mirror the paper: whole-task elapsed, individual time, speedup,
+and the per-NPPN memory footprint (predicted, the OOM guard input).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro import optim
+from repro.core import packing
+from repro.core.monitor import profile_fn
+from repro.data.mnist import synthetic_imagenet
+from repro.models import resnet
+
+N_TASKS = 12
+# reduced from the paper's 256/224px (CPU container). NOTE on expected
+# magnitude: the paper's 2.56x at NPPN=6 decomposes as 1.85x from engaging
+# the SECOND V100 (we have one device) x ~1.38x intra-GPU sharing; the
+# CPU-reproducible part is the intra-device factor (~1.2-1.3x here).
+BATCH = 2
+RES = 16
+WIDTH = 0.25
+STEPS = 2
+
+
+def _step_fn(opt):
+    def step(params, opt_state, batch, lr):
+        l, g = jax.value_and_grad(resnet.loss)(params, batch)
+        upd, opt_state = opt.update(g, opt_state, params, lr)
+        return optim.apply_updates(params, upd), opt_state, l
+    return step
+
+
+def _batch(seed, step):
+    b = synthetic_imagenet(BATCH, step, seed=seed, res=RES, classes=100)
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def run():
+    opt = optim.sgd()
+    step = _step_fn(opt)
+    init = lambda key: resnet.init(key, width=WIDTH, classes=100)
+
+    p0 = init(jax.random.PRNGKey(0))
+    prof = profile_fn(step, p0, opt.init(p0), _batch(0, 0), jnp.float32(0.1))
+    emit("imagenet.per_task_mem_mb", prof.resident_bytes / 1e6,
+         f"flops_per_step={prof.flops:.3g}")
+
+    results = {}
+    for conc in (1, 2, 4, 6):
+        packed = packing.packed_step(step, donate=False)
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(conc)])
+        params = packing.pack_init(init, keys)
+        opt_state = jax.vmap(opt.init)(params)
+        lrs = jnp.full((conc,), 0.1, jnp.float32)
+        batches = [packing.stack_trees([_batch(i, s) for i in range(conc)])
+                   for s in range(STEPS)]
+
+        def one_wave(params=params, opt_state=opt_state):
+            for s in range(STEPS):
+                params, opt_state, _ = packed(params, opt_state,
+                                              batches[s], lrs)
+            return params
+
+        t = time_fn(one_wave, warmup=1, iters=3)
+        waves = int(np.ceil(N_TASKS / conc))
+        results[conc] = (t, t * waves)
+        emit(f"imagenet.individual_time.nppn{conc}", t * 1e6, f"steps={STEPS}")
+        emit(f"imagenet.job_elapsed.nppn{conc}", t * waves * 1e6,
+             f"waves={waves}")
+        # paper Fig 6: memory grows ~linearly with NPPN
+        emit(f"imagenet.predicted_mem_mb.nppn{conc}",
+             prof.resident_bytes * conc / 1e6, "memory_model=linear")
+
+    serial = results[1][1]
+    for conc, (_, elapsed) in results.items():
+        emit(f"imagenet.speedup.nppn{conc}", elapsed * 1e6,
+             f"speedup={serial / elapsed:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Render the §Roofline table from dry-run artifacts (artifacts/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+COLS = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+        "t_collective_s", "bottleneck", "useful_flops_ratio",
+        "roofline_fraction", "peak_mem_gb_dev"]
+
+
+def load_rows(art_dir: str = "artifacts/dryrun", tag: str = "baseline"
+              ) -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "error" in r or r.get("tag", "baseline") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[dict]) -> str:
+    out = ["| " + " | ".join(COLS) + " |",
+           "|" + "---|" * len(COLS)]
+    for r in rows:
+        cells = []
+        for c in COLS:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                v = f"{v:.4g}"
+            cells.append(str(v))
+        out.append("| " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def run(art_dir: str = "artifacts/dryrun"):
+    from benchmarks.common import emit
+    rows = load_rows(art_dir)
+    if not rows:
+        emit("roofline.cells", 0, "no artifacts — run repro.launch.dryrun")
+        return []
+    emit("roofline.cells", len(rows), "")
+    # decode cells score ~0 by construction (one token/seq); rank the
+    # compute-meaningful train/prefill cells
+    meaningful = [r for r in rows
+                  if r["shape"] in ("train_4k", "prefill_32k")]
+    worst = min(meaningful, key=lambda r: r.get("roofline_fraction", 1.0))
+    best = max(meaningful,
+               key=lambda r: r.get("roofline_fraction_kernel",
+                                   r.get("roofline_fraction", 0)))
+    collective_bound = [r for r in rows if r["bottleneck"] == "collective"]
+    emit("roofline.worst_fraction_pct",
+         worst.get("roofline_fraction", 0) * 100,
+         f"{worst['arch']}/{worst['shape']}/{worst['mesh']}")
+    emit("roofline.best_kernel_fraction_pct",
+         best.get("roofline_fraction_kernel", 0) * 100,
+         f"{best['arch']}/{best['shape']}/{best['mesh']}")
+    emit("roofline.collective_bound_cells", len(collective_bound), "")
+    return rows
+
+
+if __name__ == "__main__":
+    rows = load_rows(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    print(markdown_table(rows))

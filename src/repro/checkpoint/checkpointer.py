@@ -1,0 +1,133 @@
+"""Checkpointing: atomic, per-task, restart-safe (orbax is unavailable —
+built in-repo, which the fault-tolerance story needs anyway).
+
+Layout: <dir>/step_<n>/  with one .npy per leaf + manifest.json carrying
+the pytree structure. Writes go to a tmp dir then os.rename (atomic on the
+same filesystem), so a crash mid-save never corrupts the latest step.
+``Checkpointer`` adds async save (background thread) and retention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _leaf_name(i: int, path) -> str:
+    label = jax.tree_util.keystr(path)
+    return f"{i:04d}__{_SAFE.sub('_', label)[:120]}.npy"
+
+
+def save_checkpoint(directory: str, tree: Any, step: int,
+                    extra: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` as step_<step> under directory."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, dtypes = [], []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        name = _leaf_name(i, path)
+        arr = np.asarray(leaf)
+        dtypes.append(str(arr.dtype))
+        if arr.dtype.name == "bfloat16":    # numpy can't cast loaded bf16
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, name), arr)
+        names.append(name)
+    manifest = {"step": step, "leaves": names, "dtypes": dtypes,
+                "treedef": str(treedef), "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, like: Any,
+                    step: Optional[int] = None) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``like`` (its treedef defines order).
+    Returns (tree, step, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if len(manifest["leaves"]) != len(leaves_with_paths):
+        raise ValueError("checkpoint/like structure mismatch: "
+                         f"{len(manifest['leaves'])} vs {len(leaves_with_paths)}")
+    loaded = []
+    dtypes = manifest.get("dtypes", [None] * len(manifest["leaves"]))
+    for name, dt, (p, leaf) in zip(manifest["leaves"], dtypes,
+                                   leaves_with_paths):
+        arr = np.load(os.path.join(path, name))
+        if dt == "bfloat16":
+            import jax.numpy as jnp
+            arr = arr.view(jnp.bfloat16.dtype)
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype))
+        loaded.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, loaded)
+    return tree, manifest["step"], manifest.get("extra", {})
+
+
+@dataclasses.dataclass
+class Checkpointer:
+    """Async checkpoint manager with retention, one per task lane."""
+    directory: str
+    keep: int = 3
+    _thread: Optional[threading.Thread] = None
+
+    def save(self, tree: Any, step: int, extra: Optional[dict] = None,
+             blocking: bool = True):
+        tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot off-device
+        if blocking:
+            save_checkpoint(self.directory, tree, step, extra)
+            self._gc()
+            return
+        self.wait()
+        self._thread = threading.Thread(
+            target=lambda: (save_checkpoint(self.directory, tree, step, extra),
+                            self._gc()),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, like: Any, step: Optional[int] = None):
+        self.wait()
+        return load_checkpoint(self.directory, like, step)
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)

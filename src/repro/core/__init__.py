@@ -1,0 +1,11 @@
+"""The paper's primary contribution: triples-mode resource sharing."""
+from repro.core.triples import (  # noqa: F401
+    NodeSpec, SlotAssignment, Triples, TriplesPlan, plan)
+from repro.core.packing import PackedJobs, packed_step, pack_init  # noqa: F401
+from repro.core.autotune import auto_nppn, PackingDecision  # noqa: F401
+from repro.core.monitor import RunMonitor, StaticProfile, profile_fn  # noqa: F401
+from repro.core.mapreduce import llmapreduce  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    ClusterState, Task, TaskCtx, TriplesScheduler)
+from repro.core.faults import (  # noqa: F401
+    FaultPolicy, NodeDown, TaskCrash, TaskOOM, inject_failures)

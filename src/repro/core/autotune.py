@@ -1,0 +1,84 @@
+"""auto_nppn: replace the paper's human LLload feedback loop with an
+ahead-of-time search for the largest safe packing factor.
+
+The paper: users watch GPU memory while increasing NPPN; their 48-job run
+lost 21 tasks to CUDA OOM. On TPU an HBM OOM aborts the *whole packed
+program* (all lanes), so the guard must be predictive: we lower+compile the
+packed step at candidate packing factors and read memory_analysis() —
+monotone in the packing factor, so an exponential-then-bisect search finds
+the frontier with O(log n) compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.monitor import StaticProfile, profile_compiled
+
+
+@dataclasses.dataclass(frozen=True)
+class PackingDecision:
+    nppn_per_chip: int                  # lanes per chip (pack factor)
+    profile: StaticProfile              # at the chosen factor
+    rejected: Optional[int] = None      # first factor that did NOT fit
+    reason: str = ""
+
+
+def measure_packed(make_packed: Callable[[int], Callable], k: int,
+                   example_args_fn: Callable[[int], tuple]) -> StaticProfile:
+    """Compile the k-lane packed step and profile it (no execution)."""
+    fn = make_packed(k)
+    args = example_args_fn(k)
+    compiled = jax.jit(fn).lower(*args).compile()
+    return profile_compiled(compiled)
+
+
+def auto_nppn(make_packed: Callable[[int], Callable],
+              example_args_fn: Callable[[int], tuple],
+              hbm_budget: float, *, max_factor: int = 64,
+              headroom: float = 0.95) -> PackingDecision:
+    """Largest k in [1, max_factor] whose packed step fits the HBM budget.
+
+    Exponential probe then bisection; raises if even k=1 does not fit
+    (the task needs NTPP > 1, i.e. more chips — paper's multi-GPU case).
+    """
+    prof1 = measure_packed(make_packed, 1, example_args_fn)
+    if not prof1.fits(hbm_budget, headroom):
+        raise MemoryError(
+            f"single task needs {prof1.resident_bytes/1e9:.2f} GB > budget "
+            f"{hbm_budget*headroom/1e9:.2f} GB; increase NTPP (chips/task)")
+
+    # exponential probe
+    lo, lo_prof = 1, prof1
+    hi = None
+    k = 2
+    while k <= max_factor:
+        prof = measure_packed(make_packed, k, example_args_fn)
+        if prof.fits(hbm_budget, headroom):
+            lo, lo_prof = k, prof
+            k *= 2
+        else:
+            hi = k
+            break
+    if hi is None:
+        return PackingDecision(min(lo, max_factor), lo_prof,
+                               reason="hit max_factor, all fit")
+
+    # bisect (lo fits, hi doesn't)
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        prof = measure_packed(make_packed, mid, example_args_fn)
+        if prof.fits(hbm_budget, headroom):
+            lo, lo_prof = mid, prof
+        else:
+            hi = mid
+    return PackingDecision(lo, lo_prof, rejected=hi,
+                           reason=f"k={hi} exceeds budget")
+
+
+def predict_oom(profile: StaticProfile, hbm_budget: float,
+                headroom: float = 0.95) -> bool:
+    """True if launching this program would OOM (the 48-job experiment)."""
+    return not profile.fits(hbm_budget, headroom)

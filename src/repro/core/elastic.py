@@ -1,0 +1,60 @@
+"""Elastic re-planning: node join/leave without losing triples-job work.
+
+On node loss mid-sweep: completed tasks keep their results, in-flight and
+queued tasks of the dead node are re-planned round-robin over the surviving
+nodes (optionally restoring per-task state from checkpoints). On node join
+the next wave simply plans over the larger alive set. The scheduler calls
+these helpers; they are pure functions over plans for testability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core import triples as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticState:
+    plan: T.TriplesPlan
+    completed: frozenset
+    alive_nodes: Tuple[int, ...]
+
+
+def surviving_results(plan: T.TriplesPlan, completed: Set[int],
+                      dead_nodes: Set[int]) -> Tuple[Set[int], List[int]]:
+    """Split task ids into (kept-completed, must-replan)."""
+    must = []
+    for s in plan.slots:
+        for tid in s.task_ids:
+            if tid in completed:
+                continue
+            must.append(tid)
+    # completed results survive regardless of where they ran
+    return set(completed), sorted(must)
+
+
+def replan(state: ElasticState, dead_nodes: Set[int]) -> ElasticState:
+    alive = tuple(n for n in state.alive_nodes if n not in dead_nodes)
+    if not alive:
+        raise RuntimeError("elastic replan: no nodes left")
+    _, todo = surviving_results(state.plan, set(state.completed), dead_nodes)
+    trip = state.plan.triples
+    # shrink NNODE to the surviving count; NPPN/NTPP unchanged
+    new_trip = T.Triples(nnode=len(alive), nppn=trip.nppn, ntpp=trip.ntpp)
+    new_plan = T.plan(len(todo), new_trip, state.plan.node_spec,
+                      alive_nodes=range(len(alive)))
+    # new plan indexes tasks 0..len(todo)-1; remap to original ids
+    remap = {i: tid for i, tid in enumerate(todo)}
+    slots = tuple(
+        dataclasses.replace(s, task_ids=tuple(remap[i] for i in s.task_ids))
+        for s in new_plan.slots)
+    new_plan = dataclasses.replace(new_plan, slots=slots,
+                                   n_tasks=state.plan.n_tasks)
+    return ElasticState(plan=new_plan, completed=state.completed,
+                        alive_nodes=alive)
+
+
+def join(state: ElasticState, new_nodes: Sequence[int]) -> ElasticState:
+    alive = tuple(sorted(set(state.alive_nodes) | set(new_nodes)))
+    return dataclasses.replace(state, alive_nodes=alive)

@@ -1,0 +1,57 @@
+"""Failure taxonomy + policies for triples jobs.
+
+Mirrors the paper's observed failure mode (CUDA OOM killing 21/48 packed
+tasks) plus the failure modes that matter at 1000+ nodes: task crashes,
+node loss, stragglers. Policies are pure data; the scheduler applies them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+class TaskError(RuntimeError):
+    """Base class for task-level failures."""
+
+
+class TaskOOM(TaskError):
+    """Accelerator memory exhausted (paper: CUDA out-of-memory)."""
+
+
+class TaskCrash(TaskError):
+    """Generic task failure (bad node, segfault, assertion)."""
+
+
+class NodeDown(RuntimeError):
+    """Whole-node loss; all tasks resident on it must be re-planned."""
+
+    def __init__(self, node: int, msg: str = ""):
+        super().__init__(msg or f"node {node} down")
+        self.node = node
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    max_retries: int = 2                # per task, for TaskCrash
+    oom_backoff: bool = True            # halve packing factor on TaskOOM
+    min_pack_factor: int = 1
+    speculative_stragglers: bool = True # duplicate slowest lane when idle slot
+    straggler_ratio: float = 1.5
+    checkpoint_every: int = 0           # steps; 0 = only on completion
+
+
+def inject_failures(fn: Callable, *, fail_on_calls=(), oom_on_calls=(),
+                    counter=None) -> Callable:
+    """Test helper: wrap a task fn to raise on the n-th invocation."""
+    state = counter if counter is not None else {"n": 0}
+
+    def wrapped(*a, **kw):
+        state["n"] += 1
+        n = state["n"]
+        if n in oom_on_calls:
+            raise TaskOOM(f"injected OOM on call {n}")
+        if n in fail_on_calls:
+            raise TaskCrash(f"injected crash on call {n}")
+        return fn(*a, **kw)
+
+    return wrapped

@@ -1,0 +1,67 @@
+"""LLMapReduce [paper ref 15]: map a function over many inputs under a
+triples placement, then reduce.
+
+Two execution paths:
+  * packed  — homogeneous pure-JAX map_fn: items are stacked on a lane
+    axis and executed as ONE vmapped program per pack group (the GPU-sharing
+    fast path; used by parametric sweeps).
+  * slotted — arbitrary Python tasks through the TriplesScheduler (keeps
+    the paper's semantics for heterogeneous work).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, triples as T
+from repro.core.scheduler import ClusterState, Task, TriplesScheduler
+
+
+def llmapreduce(map_fn: Callable, items: Sequence[Any], *,
+                reduce_fn: Optional[Callable] = None,
+                trip: Optional[T.Triples] = None,
+                node_spec: Optional[T.NodeSpec] = None,
+                mode: str = "packed") -> Any:
+    """Apply map_fn to every item; optionally fold results with reduce_fn.
+
+    packed mode: map_fn must be jax-traceable over stacked item pytrees.
+    Items are processed in waves of ``total_slots`` lanes (the concurrency
+    the triples allow), mirroring how LLMapReduce queues tasks per slot.
+    """
+    trip = trip or T.Triples(1, max(1, len(items)), 1)
+    node_spec = node_spec or T.NodeSpec()
+
+    if mode == "packed":
+        results: List[Any] = []
+        wave = trip.total_slots
+        vfn = jax.jit(jax.vmap(map_fn))
+        for start in range(0, len(items), wave):
+            chunk = list(items[start:start + wave])
+            n = len(chunk)
+            if n < wave:  # pad the last wave, drop padded outputs
+                chunk = chunk + [chunk[-1]] * (wave - n)
+            stacked = packing.stack_trees(chunk)
+            out = vfn(stacked)
+            outs = packing.unstack_tree(out, wave)[:n]
+            results.extend(outs)
+    elif mode == "slotted":
+        cluster = ClusterState(trip.nnode, node_spec)
+        sched = TriplesScheduler(cluster)
+        tasks = [Task(id=i, fn=(lambda ctx, it=it: map_fn(it)))
+                 for i, it in enumerate(items)]
+        job = sched.run_triples_job("llmapreduce", tasks, trip)
+        if job.failed:
+            raise RuntimeError(f"tasks failed: {job.failed}")
+        results = [job.results[i] for i in range(len(items))]
+    else:
+        raise ValueError(mode)
+
+    if reduce_fn is None:
+        return results
+    acc = results[0]
+    for r in results[1:]:
+        acc = reduce_fn(acc, r)
+    return acc

@@ -1,0 +1,140 @@
+"""LLload analogue: resource monitoring for triples jobs [paper §II, ref 21].
+
+The paper's workflow: run LLload, read CPU/GPU load + memory, choose NPPN.
+Two monitors here:
+
+  * static  — ahead-of-time prediction from the compiled program
+    (memory_analysis / cost_analysis). This is what auto_nppn consumes.
+  * runtime — per-step wall-time and live-buffer tracking per lane;
+    produces the LLload-style table and flags stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# static (ahead-of-time) analysis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StaticProfile:
+    """What LLload would show once the job is resident, predicted pre-run."""
+    argument_bytes: int
+    temp_bytes: int
+    output_bytes: int
+    flops: float
+    bytes_accessed: float
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.argument_bytes + self.temp_bytes + self.output_bytes
+
+    def fits(self, hbm_budget: float, headroom: float = 0.95) -> bool:
+        return self.resident_bytes <= hbm_budget * headroom
+
+    def load_proxy(self, peak_flops: float, step_time_s: float) -> float:
+        """GPU-load analogue: achieved FLOP/s over peak (the paper's
+        'GPU load' y-axis, Figs 2/7)."""
+        return self.flops / step_time_s / peak_flops
+
+
+def profile_compiled(compiled) -> StaticProfile:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    return StaticProfile(
+        argument_bytes=int(ma.argument_size_in_bytes),
+        temp_bytes=int(ma.temp_size_in_bytes),
+        output_bytes=int(ma.output_size_in_bytes),
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+    )
+
+
+def profile_fn(fn, *example_args, **kw) -> StaticProfile:
+    compiled = jax.jit(fn, **kw).lower(*example_args).compile()
+    return profile_compiled(compiled)
+
+
+# ---------------------------------------------------------------------------
+# runtime monitor
+# ---------------------------------------------------------------------------
+
+def live_device_bytes() -> int:
+    """Sum of live committed jax arrays (the 'GPU memory used' column)."""
+    try:
+        arrs = jax.live_arrays()
+    except Exception:
+        return 0
+    return int(sum(a.nbytes for a in arrs if hasattr(a, "nbytes")))
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    wall_s: float
+    live_bytes: int
+    lane_times: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class RunMonitor:
+    """Collects per-step timing/memory; flags stragglers.
+
+    A lane whose EWMA step time exceeds ``straggler_ratio`` × the median
+    lane EWMA is reported (paper's motivation for watching LLload while the
+    sweep runs; speculative re-execution hooks in core/faults.py).
+    """
+    straggler_ratio: float = 1.5
+    history: List[StepRecord] = dataclasses.field(default_factory=list)
+    _ewma: Optional[np.ndarray] = None
+    _t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int, lane_times: Optional[np.ndarray] = None):
+        wall = time.perf_counter() - self._t0
+        self.history.append(StepRecord(step, wall, live_device_bytes(),
+                                       lane_times))
+        if lane_times is not None:
+            lt = np.asarray(lane_times, dtype=np.float64)
+            self._ewma = lt if self._ewma is None else 0.7 * self._ewma + 0.3 * lt
+        return wall
+
+    def stragglers(self) -> List[int]:
+        if self._ewma is None or len(self._ewma) < 2:
+            return []
+        med = float(np.median(self._ewma))
+        if med <= 0:
+            return []
+        return [i for i, t in enumerate(self._ewma)
+                if t > self.straggler_ratio * med]
+
+    def summary(self) -> Dict[str, float]:
+        if not self.history:
+            return {}
+        walls = np.array([r.wall_s for r in self.history])
+        return {"steps": len(walls), "mean_s": float(walls.mean()),
+                "p50_s": float(np.median(walls)), "max_s": float(walls.max()),
+                "last_live_bytes": self.history[-1].live_bytes}
+
+
+def llload_table(node_name: str, profiles: Dict[str, StaticProfile],
+                 hbm_total: float, step_times: Dict[str, float],
+                 peak_flops: float) -> str:
+    """Render the LLload-style snapshot (paper Fig. 1) for compiled jobs."""
+    lines = [f"{'JOB':24s} {'GPUMEM-USED':>12s} {'GPUMEM-FREE':>12s} "
+             f"{'GPULOAD':>8s}"]
+    for name, p in profiles.items():
+        used = p.resident_bytes
+        load = (p.load_proxy(peak_flops, step_times[name])
+                if name in step_times else float("nan"))
+        lines.append(f"{name:24s} {used/1e9:10.1f}GB {(hbm_total-used)/1e9:10.1f}GB "
+                     f"{load:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLM, TokenFileDataset, write_token_file, make_lm_batch)
+from repro.data.mnist import synthetic_mnist, synthetic_imagenet  # noqa: F401

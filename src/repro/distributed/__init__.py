@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    param_shardings, batch_shardings, fsdp_axes_of, ShardingRules)
+from repro.distributed.compression import (  # noqa: F401
+    quantize_int8, dequantize_int8, ErrorFeedback, compressed_psum)

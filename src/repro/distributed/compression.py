@@ -1,0 +1,79 @@
+"""Gradient compression for data-parallel reduction.
+
+Two schemes, both with error feedback (EF — residual carried to the next
+step so compression error does not bias convergence [1-bit Adam lineage]):
+
+  * bf16 all-reduce — halves collective bytes vs fp32; the production
+    default when grads are kept fp32 master.
+  * int8 all-reduce — global-scale symmetric quantization: pmax of |g|
+    fixes one scale across ranks, ranks psum int32 counts (4× fewer bytes
+    than fp32 when the transport packs int8; we model bytes analytically in
+    the roofline since XLA's psum dtype is what it is).
+
+Used by the manual-collective (shard_map) DP variant; GSPMD's automatic
+all-reduce path stays fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array, scale: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    if scale is None:
+        scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """e_{t+1} = g_t + e_t - D(C(g_t + e_t)); call inside the train step."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any, compress_fn) -> Tuple[Any, Any]:
+        """Returns (compressed-then-decompressed grads, new residual)."""
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            out = compress_fn(corrected)
+            return out, corrected - out
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(residual)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in outs]),
+                treedef.unflatten([o[1] for o in outs]))
+
+
+def compressed_psum(g: jax.Array, axis, scheme: str = "bf16") -> jax.Array:
+    """All-reduce with reduced-precision payload (inside shard_map)."""
+    if scheme == "fp32":
+        return jax.lax.psum(g.astype(jnp.float32), axis)
+    if scheme == "bf16":
+        return jax.lax.psum(g.astype(jnp.bfloat16), axis).astype(jnp.float32)
+    if scheme == "int8":
+        local_max = jnp.max(jnp.abs(g))
+        gmax = jax.lax.pmax(local_max, axis)
+        scale = gmax / 127.0 + 1e-12
+        q, _ = quantize_int8(g, scale)
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        return total.astype(jnp.float32) * scale
+    raise ValueError(scheme)
+
+
+def bytes_for_scheme(n_elements: int, scheme: str) -> int:
+    """Collective payload bytes per rank (roofline accounting)."""
+    width = {"fp32": 4, "bf16": 2, "int8": 1}[scheme]
+    return n_elements * width

@@ -1,0 +1,75 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+``impl`` resolution: "pallas" on TPU, "xla" elsewhere; tests force
+"pallas_interpret". The flash-attention wrapper carries a custom_vjp whose
+backward is recompute through the memory-efficient jnp path, so the kernels
+are usable inside train_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _use_pallas(interpret: bool) -> bool:
+    return interpret or jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention (fwd kernel + recompute bwd)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = False):
+    if _use_pallas(interpret):
+        from repro.kernels.flash_attention import flash_attention_fwd
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   interpret=interpret)
+    from repro.models.attention import sdpa_chunked
+    return sdpa_chunked(q, k, v, causal=causal, window=window)
+
+
+def _fa_fwd(q, k, v, causal, window, interpret):
+    return flash_attention(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _fa_bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    from repro.models.attention import sdpa_chunked
+    _, vjp = jax.vjp(
+        lambda q, k, v: sdpa_chunked(q, k, v, causal=causal, window=window),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """Dispatch to kernel on TPU / interpret, else chunked jnp."""
+    if _use_pallas(interpret):
+        from repro.kernels.ssd_scan import ssd_scan
+        return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# packed (multi-job) GEMM
+# ---------------------------------------------------------------------------
+
+def packed_matmul(x, w, *, interpret: bool = False):
+    """x (J,M,K) @ w (J,K,N) per job."""
+    if _use_pallas(interpret):
+        from repro.kernels.packed_gemm import packed_gemm
+        return packed_gemm(x, w, interpret=interpret)
+    from repro.kernels.ref import packed_gemm_ref
+    return packed_gemm_ref(x, w)

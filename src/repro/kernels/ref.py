@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive full-materialization attention. q (B,Sq,Hq,D); k/v (B,Sk,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D) * (D ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence oracle (see models.ssm)."""
+    from repro.models.ssm import ssd_reference_recurrent
+    return ssd_reference_recurrent(x, dt, A, B, C)
+
+
+def packed_gemm_ref(x, w):
+    """x (J, M, K); w (J, K, N) -> (J, M, N): per-job matmul."""
+    return jnp.einsum("jmk,jkn->jmn",
+                      x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,101 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Grid (B, S/Q): the chunk axis is sequential ("arbitrary") and the running
+inter-chunk state (nh, hd, N) lives in VMEM scratch — the HBM traffic per
+chunk is exactly the chunk's inputs/outputs, the recurrent state never
+leaves VMEM. Intra-chunk work is the dual (attention-like) form: dense
+(Q,Q) matmuls that feed the MXU. Oracle: kernels.ref.ssd_ref /
+models.ssm.ssd_chunked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, state_ref,
+                state_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, nh, hd)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, nh)
+    A = A_ref[...].astype(jnp.float32)        # (nh,)
+    Bm = B_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)         # (Q, N)
+
+    dA = dt * A                               # (Q, nh) log-decay per step
+    la = jnp.cumsum(dA, axis=0)
+    la_total = la[-1]                         # (nh,)
+    xb = x * dt[..., None]
+
+    # intra-chunk (dual form)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    diff = la[:, None, :] - la[None, :, :]                       # (Q, Q, nh)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where((iq >= jq)[..., None], jnp.exp(diff), 0.0)
+    y = jnp.einsum("ij,ijh,jhp->ihp", CB, decay, xb)
+
+    # inter-chunk from carried state
+    state_in = state_scr[...]                                    # (nh, hd, N)
+    c_dec = Cm[:, None, :] * jnp.exp(la)[..., None]              # (Q, nh, N)
+    y += jnp.einsum("ihn,hpn->ihp", c_dec, state_in)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    decay_out = jnp.exp(la_total[None, :] - la)                  # (Q, nh)
+    chunk_state = jnp.einsum("jh,jhp,jn->hpn", decay_out, xb, Bm)
+    state_scr[...] = state_in * jnp.exp(la_total)[:, None, None] + chunk_state
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        state_ref[0] = state_scr[...]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128,
+             interpret: bool = False):
+    """x (b,S,nh,hd); dt (b,S,nh); A (nh,); B/C (b,S,N).
+    Returns (y (b,S,nh,hd), final_state (b,nh,hd,N) fp32)."""
+    b, S, nh, hd = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    nc = S // chunk
+
+    grid = (b, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, chunk, nh), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((nh,), lambda i, c: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, nh, hd, N), lambda i, c: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, state

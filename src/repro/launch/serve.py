@@ -1,0 +1,78 @@
+"""Serving driver: prefill + batched decode (continuous-batching-lite).
+
+The serve_step builders are what the dry-run lowers for decode shapes; the
+``BatchServer`` is a runnable mini-server for the examples: fixed-size lane
+pool, new requests join as lanes free up (the inference-side analogue of
+the paper's concurrent-jobs-per-GPU packing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def make_prefill(model: Model, max_len: int) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill
+
+
+def make_serve_step(model: Model) -> Callable:
+    """(params, batch{tokens,pos[,mrope_pos]}, cache) -> (logits, cache)."""
+    def serve_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchServer:
+    """Greedy-decode server over a fixed lane pool."""
+
+    def __init__(self, model: Model, params, batch_lanes: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.lanes = batch_lanes
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill(model, max_len))
+        self._step = jax.jit(make_serve_step(model), donate_argnums=(2,))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        while queue:
+            active = queue[:self.lanes]
+            queue = queue[self.lanes:]
+            B = len(active)
+            S = max(len(r.prompt) for r in active)
+            toks = np.zeros((B, S), np.int32)
+            for i, r in enumerate(active):
+                toks[i, -len(r.prompt):] = r.prompt  # left-pad
+            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos = jnp.full((B,), S, jnp.int32)
+            max_new = max(r.max_new for r in active)
+            outs = [[] for _ in active]
+            for t in range(max_new):
+                for i in range(B):
+                    outs[i].append(int(cur[i]))
+                logits, cache = self._step(
+                    self.params, {"tokens": cur[:, None], "pos": pos}, cache)
+                cur = jnp.argmax(logits, -1).astype(jnp.int32)
+                pos = pos + 1
+            for r, o in zip(active, outs):
+                results[r.id] = o[:r.max_new]
+        return results

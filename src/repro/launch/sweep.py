@@ -1,0 +1,131 @@
+"""Parametric-study sweep driver — the paper's headline use case.
+
+Runs K training tasks (same architecture, different hyperparameters / data
+seeds) under a triples placement: auto_nppn picks the largest safe packing
+factor, tasks pack as vmapped lanes, the monitor watches for stragglers,
+checkpoints make OOM-backoff / node-loss recovery lossless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import Checkpointer
+from repro.core import autotune, packing, triples as T
+from repro.core.faults import FaultPolicy, TaskOOM
+from repro.core.monitor import RunMonitor
+from repro.launch.train import make_train_step
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class SweepTask:
+    id: int
+    lr: float
+    seed: int
+
+
+@dataclasses.dataclass
+class SweepResult:
+    losses: Dict[int, List[float]]
+    wall_s: float
+    pack_factor: int
+    backoffs: int = 0
+
+
+def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
+              batch_fn: Callable[[int, int], Any],   # (seed, step) -> batch
+              steps: int,
+              hbm_budget: Optional[float] = None,
+              max_pack: Optional[int] = None,
+              checkpoint_dir: Optional[str] = None,
+              policy: Optional[FaultPolicy] = None,
+              opt: Optional[optim.Optimizer] = None) -> SweepResult:
+    """Train all tasks; packing factor chosen by the memory guard."""
+    policy = policy or FaultPolicy()
+    opt = opt or optim.adamw(weight_decay=0.0)
+    step_fn = make_train_step(model, opt)
+
+    # ---- choose packing factor (auto_nppn) ----
+    n = len(tasks)
+    if max_pack is None:
+        max_pack = n
+    if hbm_budget is not None:
+        def make_packed(k):
+            return jax.vmap(step_fn)
+
+        def example_args(k):
+            keys = jax.random.split(jax.random.PRNGKey(0), k)
+            p = jax.vmap(model.init)(keys)
+            o = jax.vmap(opt.init)(p)
+            b = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (k, *x.shape)),
+                jax.tree_util.tree_map(jnp.asarray, batch_fn(0, 0)))
+            lr = jnp.zeros((k,), jnp.float32)
+            return (p, o, b, lr)
+
+        decision = autotune.auto_nppn(make_packed, example_args,
+                                      hbm_budget, max_factor=max_pack)
+        pack = decision.nppn_per_chip
+    else:
+        pack = min(max_pack, n)
+
+    # ---- run waves of `pack` lanes ----
+    t0 = time.perf_counter()
+    losses: Dict[int, List[float]] = {t.id: [] for t in tasks}
+    packed_fn = packing.packed_step(step_fn)
+    mon = RunMonitor(straggler_ratio=policy.straggler_ratio)
+    backoffs = 0
+
+    queue = list(tasks)
+    while queue:
+        wave = queue[:pack]
+        queue = queue[pack:]
+        k = len(wave)
+        keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in wave])
+        params = packing.pack_init(model.init, keys)
+        opt_state = jax.vmap(opt.init)(params)
+        lrs = jnp.asarray([t.lr for t in wave], jnp.float32)
+        ckpt = (Checkpointer(f"{checkpoint_dir}/wave_{wave[0].id}")
+                if checkpoint_dir else None)
+        start = 0
+        if ckpt is not None:
+            try:
+                (params, opt_state), start, _ = ckpt.restore((params, opt_state))
+            except FileNotFoundError:
+                pass
+        for step in range(start, steps):
+            batch = packing.stack_trees([
+                jax.tree_util.tree_map(jnp.asarray, batch_fn(t.seed, step))
+                for t in wave])
+            mon.start_step()
+            try:
+                params, opt_state, metrics = packed_fn(
+                    params, opt_state, batch, lrs)
+            except Exception as e:  # OOM backoff: halve, re-enqueue halves
+                if policy.oom_backoff and k > policy.min_pack_factor:
+                    backoffs += 1
+                    pack = max(policy.min_pack_factor, pack // 2)
+                    queue = list(wave) + queue
+                    params = opt_state = None
+                    break
+                raise
+            mon.end_step(step)
+            loss_vec = np.asarray(metrics["loss"])
+            for i, t in enumerate(wave):
+                losses[t.id].append(float(loss_vec[i]))
+            if ckpt is not None and policy.checkpoint_every and \
+                    (step + 1) % policy.checkpoint_every == 0:
+                ckpt.save((params, opt_state), step + 1, blocking=False)
+        if ckpt is not None and params is not None:
+            ckpt.save((params, opt_state), steps)
+            ckpt.wait()
+
+    return SweepResult(losses=losses, wall_s=time.perf_counter() - t0,
+                       pack_factor=pack, backoffs=backoffs)

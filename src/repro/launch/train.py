@@ -1,0 +1,93 @@
+"""Training driver: step builder (used by dry-run, tests, examples) plus a
+fault-tolerant training loop with checkpointing and monitoring."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import Checkpointer
+from repro.core.monitor import RunMonitor
+from repro.models.model import Model
+
+
+def make_train_step(model: Model, opt: optim.Optimizer) -> Callable:
+    """(params, opt_state, batch, lr) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch, lr):
+        (_, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = optim.apply_updates(params, updates)
+        metrics["grad_norm"] = optim.global_norm(grads)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics
+    return eval_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Single-task training loop (lanes of a packed sweep reuse the same
+    step through core.packing instead)."""
+    model: Model
+    opt: optim.Optimizer
+    lr_schedule: Callable
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 100
+    log_every: int = 10
+
+    def fit(self, key, batch_iter, steps: int,
+            params: Any = None, opt_state: Any = None,
+            start_step: int = 0) -> Dict[str, Any]:
+        model, opt = self.model, self.opt
+        if params is None:
+            params = model.init(key)
+        if opt_state is None:
+            opt_state = opt.init(params)
+        ckpt = (Checkpointer(self.checkpoint_dir)
+                if self.checkpoint_dir else None)
+        if ckpt is not None:
+            try:
+                (params, opt_state), start_step, _ = ckpt.restore(
+                    (params, opt_state))
+                print(f"[trainer] resumed from step {start_step}")
+            except FileNotFoundError:
+                pass
+
+        step_fn = jax.jit(make_train_step(model, opt),
+                          donate_argnums=(0, 1))
+        mon = RunMonitor()
+        losses = []
+        it = iter(batch_iter)
+        for step in range(start_step, steps):
+            batch = next(it)
+            batch = jax.tree_util.tree_map(jnp.asarray, batch)
+            mon.start_step()
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, self.lr_schedule(step))
+            loss = float(metrics["loss"])
+            mon.end_step(step)
+            losses.append(loss)
+            if self.log_every and step % self.log_every == 0:
+                print(f"[trainer] step {step} loss {loss:.4f} "
+                      f"({mon.history[-1].wall_s*1e3:.0f} ms)")
+            if ckpt is not None and (step + 1) % self.checkpoint_every == 0:
+                ckpt.save((params, opt_state), step + 1, blocking=False)
+        if ckpt is not None:
+            ckpt.save((params, opt_state), steps)
+            ckpt.wait()
+        return {"params": params, "opt_state": opt_state,
+                "losses": losses, "monitor": mon.summary()}

@@ -1,0 +1,53 @@
+"""LeNet-4 [LeCun 1998] — the paper's MNIST experiment model (§III-A).
+
+4 learned layers: conv(4) -> pool -> conv(16) -> pool -> fc(120) -> fc(10),
+matching the LeNet-4 description; trained with the paper's default batch 64.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def init(key) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 4)
+    return {
+        "c1_w": jax.random.normal(ks[0], (5, 5, 1, 4)) * 0.1,
+        "c1_b": jnp.zeros((4,)),
+        "c2_w": jax.random.normal(ks[1], (5, 5, 4, 16)) * 0.1,
+        "c2_b": jnp.zeros((16,)),
+        "f1_w": layers.dense_init(ks[2], 7 * 7 * 16, 120, jnp.float32),
+        "f1_b": jnp.zeros((120,)),
+        "f2_w": layers.dense_init(ks[3], 120, 10, jnp.float32),
+        "f2_b": jnp.zeros((10,)),
+    }
+
+
+def apply(params, image) -> jax.Array:
+    x = _pool(jnp.tanh(_conv(image, params["c1_w"], params["c1_b"])))
+    x = _pool(jnp.tanh(_conv(x, params["c2_w"], params["c2_b"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["f1_w"] + params["f1_b"])
+    return x @ params["f2_w"] + params["f2_b"]
+
+
+def loss(params, batch) -> jax.Array:
+    logits = apply(params, batch["image"])
+    onehot = jax.nn.one_hot(batch["label"], 10)
+    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))

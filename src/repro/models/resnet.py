@@ -1,0 +1,96 @@
+"""ResNet-18 [He et al. 2016] — the paper's ImageNet experiment model
+(§III-B), with a ``width``/``res`` knob so the CPU benchmark uses a reduced
+configuration (paper behaviour is throughput-shaped, not accuracy-shaped).
+
+BatchNorm is replaced by GroupNorm (batch-size independent — required for
+vmapped lane packing where per-lane batch stats must not mix; equivalent
+throughput shape).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, scale, bias, groups=8):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(B, H, W, C) * scale + bias
+
+
+def _block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    scale = (2.0 / (9 * cin)) ** 0.5
+    p = {
+        "w1": jax.random.normal(ks[0], (3, 3, cin, cout)) * scale,
+        "g1": jnp.ones((cout,)), "b1": jnp.zeros((cout,)),
+        "w2": jax.random.normal(ks[1], (3, 3, cout, cout)) * scale,
+        "g2": jnp.ones((cout,)), "b2": jnp.zeros((cout,)),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = jax.random.normal(ks[2], (1, 1, cin, cout)) * scale
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_gn(_conv(x, p["w1"], stride), p["g1"], p["b1"]))
+    h = _gn(_conv(h, p["w2"]), p["g2"], p["b2"])
+    if "proj" in p:
+        x = _conv(x, p["proj"], stride)
+    return jax.nn.relu(x + h)
+
+
+STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]   # (channels, first stride)
+
+
+def init(key, width: float = 1.0, classes: int = 1000) -> Dict:
+    ks = jax.random.split(key, 12)
+    w0 = int(64 * width)
+    params = {
+        "stem_w": jax.random.normal(ks[0], (3, 3, 3, w0)) * 0.1,
+        "stem_g": jnp.ones((w0,)), "stem_b": jnp.zeros((w0,)),
+        "blocks": [],
+    }
+    cin = w0
+    ki = 1
+    for ch, stride in STAGES:
+        cout = int(ch * width)
+        stage = []
+        for b in range(2):                     # ResNet-18: 2 blocks/stage
+            stage.append(_block_init(ks[ki], cin, cout,
+                                     stride if b == 0 else 1))
+            cin = cout
+            ki += 1
+        params["blocks"].append(stage)
+    params["head_w"] = jax.random.normal(ks[ki], (cin, classes)) * 0.02
+    params["head_b"] = jnp.zeros((classes,))
+    return params
+
+
+def apply(params, image) -> jax.Array:
+    x = jax.nn.relu(_gn(_conv(image, params["stem_w"]),
+                        params["stem_g"], params["stem_b"]))
+    for stage, (ch, stride) in zip(params["blocks"], STAGES):
+        for b, p in enumerate(stage):
+            x = _block_apply(p, x, stride if b == 0 else 1)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head_w"] + params["head_b"]
+
+
+def loss(params, batch) -> jax.Array:
+    logits = apply(params, batch["image"])
+    classes = logits.shape[-1]
+    onehot = jax.nn.one_hot(batch["label"] % classes, classes)
+    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, apply_updates, global_norm, clip_by_global_norm)
+from repro.optim.schedule import (  # noqa: F401
+    constant, cosine_decay, linear_warmup_cosine)

@@ -1,0 +1,105 @@
+"""Optimizers (optax is not available in this container; the task requires
+the substrate to be built in-repo anyway).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params, lr) -> (updates, state)``. ``lr`` is a
+runtime scalar so packed sweeps can vmap per-lane learning rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]    # (grads, state, params, lr) -> (upd, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    """AdamW with decoupled weight decay + global-norm clipping.
+
+    ``moment_dtype=bf16`` halves optimizer-state HBM (the llama3-405b
+    single-pod fit lever identified in EXPERIMENTS §Dry-run): moments are
+    stored bf16, the update math stays fp32 (load-convert-store)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        b1c = 1 - b1 ** count.astype(jnp.float32)
+        b2c = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, n, p):
+            g = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            n32 = b2 * n.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            mh = m32 / b1c
+            nh = n32 / b2c
+            step = mh / (jnp.sqrt(nh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * step, m32.astype(moment_dtype),
+                    n32.astype(moment_dtype))
+
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        gs = treedef.flatten_up_to(grads)
+        ms = treedef.flatten_up_to(state["mu"])
+        ns = treedef.flatten_up_to(state["nu"])
+        out = [upd(g, m, n, p) for g, m, n, p in zip(gs, ms, ns, flat)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def sgd(momentum: float = 0.9, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"v": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        if grad_clip:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+
+        def upd(g, v):
+            v = momentum * v + g.astype(jnp.float32)
+            return -lr * v, v
+
+        flat, treedef = jax.tree_util.tree_flatten(grads)
+        vs = treedef.flatten_up_to(state["v"])
+        out = [upd(g, v) for g, v in zip(flat, vs)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"v": treedef.unflatten([o[1] for o in out])})
+
+    return Optimizer(init, update)

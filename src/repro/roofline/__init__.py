@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, RooflineReport, analyze_compiled, parse_collectives, model_flops)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# tests run on the single real CPU device; the dry-run subprocesses set
+# their own XLA_FLAGS (do NOT set a global device count here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,32 @@
+"""Mini property-testing helper (hypothesis is not installed in this
+container): seeded random case generation with failure reproduction info."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+
+
+def given_cases(n: int = 50, seed: int = 0) -> Callable:
+    """Decorator: run the test body n times with independent rngs.
+    The body receives a np.random.Generator; failures report the case id."""
+
+    def deco(fn):
+        # NOTE: the wrapper must take NO parameters, otherwise pytest treats
+        # the wrapped test's `rng` argument as a fixture request.
+        @functools.wraps(fn)
+        def wrapper():
+            for i in range(n):
+                rng = np.random.Generator(np.random.Philox(key=seed,
+                                                           counter=[i, 0, 0, 0]))
+                try:
+                    fn(rng)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"[property case {i} seed {seed}] {e}") from e
+        wrapper.__wrapped__ = None      # hide original signature from pytest
+        wrapper.__signature__ = None
+        return wrapper
+
+    return deco

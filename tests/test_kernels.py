@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.packed_gemm import packed_gemm
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models import ssm
+from tests.prop import given_cases
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,D,causal,window",
+    [
+        (2, 128, 128, 4, 2, 64, True, 0),       # GQA causal
+        (1, 256, 256, 4, 4, 32, False, 0),      # MHA bidir
+        (2, 96, 96, 2, 1, 64, True, 32),        # MQA + sliding window
+        (1, 200, 200, 4, 2, 128, True, 0),      # non-block-multiple seq
+        (1, 64, 192, 8, 8, 64, False, 0),       # cross-length
+    ])
+def test_flash_attention_vs_ref(B, Sq, Sk, Hq, Hkv, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + Hq + D), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+@given_cases(n=8, seed=3)
+def test_flash_attention_random_shapes(rng):
+    B = int(rng.integers(1, 3))
+    Hkv = int(rng.choice([1, 2, 4]))
+    G = int(rng.choice([1, 2]))
+    D = int(rng.choice([32, 64]))
+    S = int(rng.integers(2, 24)) * 8
+    causal = bool(rng.integers(0, 2))
+    ks = jax.random.split(jax.random.PRNGKey(int(rng.integers(0, 1 << 30))), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv * G, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=32, block_k=32,
+                              interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_chunked():
+    """custom_vjp bwd (recompute) == autodiff of the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+
+    def f_kernel(q, k, v):
+        return ops.flash_attention(q, k, v, True, 0, True).sum()
+
+    def f_ref(q, k, v):
+        return ref.attention_ref(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,S,nh,hd,N,chunk",
+                         [(2, 128, 4, 16, 32, 32),
+                          (1, 64, 2, 8, 16, 64),
+                          (2, 96, 3, 16, 64, 32)])
+def test_ssd_kernel_vs_recurrence(b, S, nh, hd, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(S + N), 5)
+    x = jax.random.normal(ks[0], (b, S, nh, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, nh))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, S, N), dtype)
+    C = jax.random.normal(ks[4], (b, S, N), dtype)
+    y, st = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y2, st2 = ref.ssd_ref(x.astype(jnp.float32), dt.astype(jnp.float32), A,
+                          B.astype(jnp.float32), C.astype(jnp.float32))
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(y2),
+                               **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st2),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_kernel_matches_jnp_chunked_exactly():
+    """Kernel and the model's XLA path share the same chunked algorithm."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    b, S, nh, hd, N = 2, 256, 4, 32, 64
+    x = jax.random.normal(ks[0], (b, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    B = jax.random.normal(ks[3], (b, S, N))
+    C = jax.random.normal(ks[4], (b, S, N))
+    y1, s1 = ssd_scan(x, dt, A, B, C, chunk=64, interpret=True)
+    y2, s2 = ssm.ssd_chunked(x, dt, A, B, C, chunk=64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# packed multi-job GEMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("J,M,K,N,bm", [(4, 64, 64, 64, 32),
+                                        (3, 50, 70, 30, 32),
+                                        (8, 128, 32, 16, 64),
+                                        (1, 16, 16, 16, 16)])
+def test_packed_gemm_vs_ref(J, M, K, N, bm, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(J * M + N), 2)
+    x = jax.random.normal(ks[0], (J, M, K), dtype)
+    w = jax.random.normal(ks[1], (J, K, N), dtype)
+    out = packed_gemm(x, w, block_m=bm, block_n=bm, block_k=bm,
+                      interpret=True)
+    expect = ref.packed_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOL[dtype])
+
+
+def test_ops_dispatch_on_cpu_uses_xla():
+    """On CPU without interpret, ops fall back to the jnp path."""
+    q = jnp.ones((1, 16, 2, 8))
+    out = ops.flash_attention(q, q, q, True, 0, False)
+    assert out.shape == q.shape

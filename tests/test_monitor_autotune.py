@@ -1,0 +1,66 @@
+"""LLload analogue + auto_nppn memory guard."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.monitor import RunMonitor, StaticProfile, profile_fn
+
+
+def test_profile_fn_counts_memory_and_flops():
+    def f(x, w):
+        return jnp.tanh(x @ w).sum()
+    p = profile_fn(f, jnp.ones((128, 256)), jnp.ones((256, 512)))
+    assert p.argument_bytes == (128 * 256 + 256 * 512) * 4
+    assert p.flops > 2 * 128 * 256 * 512 * 0.9
+    assert p.resident_bytes > 0
+
+
+def test_fits_and_load_proxy():
+    p = StaticProfile(argument_bytes=10 ** 9, temp_bytes=10 ** 9,
+                      output_bytes=0, flops=1e12, bytes_accessed=0)
+    assert p.fits(hbm_budget=16e9)
+    assert not p.fits(hbm_budget=2e9)
+    assert abs(p.load_proxy(peak_flops=2e12, step_time_s=1.0) - 0.5) < 1e-9
+
+
+def test_straggler_detection():
+    mon = RunMonitor(straggler_ratio=1.5)
+    for step in range(5):
+        mon.start_step()
+        lane_times = np.array([0.1, 0.1, 0.1, 0.5])   # lane 3 lags
+        mon.end_step(step, lane_times)
+    assert mon.stragglers() == [3]
+    assert mon.summary()["steps"] == 5
+
+
+def test_auto_nppn_with_real_jit():
+    """Packing factor search against a real compiled vmapped step."""
+    def step(params, x):
+        return params @ x
+
+    def make_packed(k):
+        return jax.vmap(step)
+
+    def example_args(k):
+        return (jnp.ones((k, 256, 256)), jnp.ones((k, 256, 64)))
+
+    one = autotune.measure_packed(make_packed, 1, example_args)
+    per_lane = one.resident_bytes
+    budget = per_lane * 4.5
+    d = autotune.auto_nppn(make_packed, example_args, budget, max_factor=16,
+                           headroom=1.0)
+    assert 3 <= d.nppn_per_chip <= 5        # ~4 lanes fit
+    assert d.profile.fits(budget, headroom=1.0)
+
+    with pytest.raises(MemoryError):
+        autotune.auto_nppn(make_packed, example_args, per_lane * 0.5,
+                           max_factor=4, headroom=1.0)
+
+
+def test_predict_oom_guards_the_48_job_case():
+    p = StaticProfile(argument_bytes=48 * 4 * 10 ** 9, temp_bytes=0,
+                      output_bytes=0, flops=0, bytes_accessed=0)
+    # 48 jobs × 4GB > 64GB of two V100s -> guard fires BEFORE launch
+    assert autotune.predict_oom(p, hbm_budget=64e9)

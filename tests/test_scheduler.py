@@ -1,0 +1,103 @@
+"""Scheduler semantics: whole-node policy, gang dispatch, faults, elastic."""
+import pytest
+
+from repro.core import triples as T
+from repro.core.elastic import ElasticState, replan
+from repro.core.faults import (FaultPolicy, NodeDown, TaskCrash, TaskOOM,
+                               inject_failures)
+from repro.core.scheduler import ClusterState, Task, TriplesScheduler
+
+
+def test_gang_runs_all_tasks():
+    cl = ClusterState(4)
+    s = TriplesScheduler(cl)
+    tasks = [Task(id=i, fn=lambda ctx, i=i: (i, ctx.node, ctx.chips))
+             for i in range(20)]
+    res = s.run_triples_job("alice", tasks, T.Triples(4, 2, 1))
+    assert not res.failed
+    assert set(res.results) == set(range(20))
+    assert res.alloc_cycles == 1          # ONE allocation for the gang
+    # whole-node released afterwards
+    assert all(v is None for v in cl.owner.values())
+
+
+def test_whole_node_policy_blocks_second_user():
+    cl = ClusterState(2)
+    got = cl.allocate("alice", 2)
+    assert got == [0, 1]
+    assert cl.allocate("bob", 1) is None   # no free node for bob
+    assert cl.allocate("alice", 2) == [0, 1]  # same user may reuse
+    cl.release([0])
+    assert cl.allocate("bob", 1) == [0]
+
+
+def test_retry_then_success():
+    cl = ClusterState(1)
+    s = TriplesScheduler(cl, FaultPolicy(max_retries=2))
+    flaky = inject_failures(lambda ctx: "ok", fail_on_calls=(1,))
+    tasks = [Task(id=0, fn=flaky)]
+    res = s.run_triples_job("u", tasks, T.Triples(1, 1, 1))
+    assert res.results[0] == "ok"
+    assert not res.failed
+    kinds = [e.kind for e in res.events]
+    assert "retry" in kinds
+
+
+def test_retry_exhaustion_fails_task():
+    cl = ClusterState(1)
+    s = TriplesScheduler(cl, FaultPolicy(max_retries=1))
+    always = inject_failures(lambda ctx: "ok", fail_on_calls=(1, 2, 3, 4))
+    res = s.run_triples_job("u", [Task(id=0, fn=always)], T.Triples(1, 1, 1))
+    assert 0 in res.failed
+
+
+def test_oom_marks_failed_like_paper_48_jobs():
+    """Paper: 21/48 tasks died with CUDA OOM; OOM is terminal per-task."""
+    cl = ClusterState(1)
+    s = TriplesScheduler(cl)
+    def boom(ctx):
+        raise TaskOOM("CUDA out of memory (simulated)")
+    tasks = [Task(id=i, fn=(boom if i % 2 else (lambda ctx: "ok")))
+             for i in range(8)]
+    res = s.run_triples_job("u", tasks, T.Triples(1, 4, 1))
+    assert len(res.failed) == 4 and len(res.results) == 4
+
+
+def test_node_down_replans_and_completes():
+    cl = ClusterState(3)
+    s = TriplesScheduler(cl)
+    killed = {"done": False}
+
+    def maybe_die(ctx):
+        if ctx.node == 1 and not killed["done"]:
+            killed["done"] = True
+            raise NodeDown(1)
+        return ctx.task_id
+
+    tasks = [Task(id=i, fn=maybe_die) for i in range(12)]
+    res = s.run_triples_job("u", tasks, T.Triples(3, 2, 1))
+    assert not res.failed
+    assert set(res.results) == set(range(12))
+    assert 1 in cl.down
+    assert any(e.kind == "node_down" for e in res.events)
+    assert any(e.kind == "replan" for e in res.events)
+
+
+def test_job_array_does_per_task_allocations():
+    cl = ClusterState(2)
+    s = TriplesScheduler(cl)
+    tasks = [Task(id=i, fn=lambda ctx: 1) for i in range(10)]
+    res = s.run_job_array("u", tasks)
+    assert res.alloc_cycles == 10          # vs 1 for triples mode
+    assert len(res.results) == 10
+
+
+def test_elastic_replan_pure():
+    trip = T.Triples(4, 2, 1)
+    plan = T.plan(16, trip)
+    st = ElasticState(plan=plan, completed=frozenset({0, 1, 2, 3}),
+                      alive_nodes=(0, 1, 2, 3))
+    st2 = replan(st, dead_nodes={2})
+    assert set(st2.alive_nodes) == {0, 1, 3}
+    replanned = sorted(t for s in st2.plan.slots for t in s.task_ids)
+    assert replanned == list(range(4, 16))   # completed not re-run

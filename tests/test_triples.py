@@ -1,0 +1,89 @@
+"""Property + example tests for the triples placement (paper §II)."""
+import math
+
+import pytest
+
+from repro.core import triples as T
+from tests.prop import given_cases
+
+
+@given_cases(n=200, seed=1)
+def test_plan_properties(rng):
+    nnode = int(rng.integers(1, 9))
+    nppn = int(rng.integers(1, 33))
+    ntpp = int(rng.integers(1, 9))
+    chips = int(rng.integers(1, 9))
+    n_tasks = int(rng.integers(0, 200))
+    trip = T.Triples(nnode, nppn, ntpp)
+    spec = T.NodeSpec(chips_per_node=chips)
+    p = T.plan(n_tasks, trip, spec)
+
+    # 1. every task assigned exactly once
+    assigned = sorted(t for s in p.slots for t in s.task_ids)
+    assert assigned == list(range(n_tasks))
+
+    # 2. slot load balance: |len_i - len_j| <= 1 (round-robin)
+    lens = [len(s.task_ids) for s in p.slots]
+    assert max(lens) - min(lens) <= 1
+
+    # 3. slots per node == nppn
+    for node in range(nnode):
+        assert sum(1 for s in p.slots if s.node == node) == nppn
+
+    # 4. chip round-robin balance per node
+    load = p.chip_load()
+    for node in range(nnode):
+        node_loads = [load.get((node, c), 0) for c in range(chips)]
+        assert max(node_loads) - min(node_loads) <= math.ceil(ntpp / chips), \
+            f"unbalanced chips {node_loads}"
+
+    # 5. pack factor formula + sharing predicate
+    assert p.pack_factor == max(1, math.ceil(nppn * ntpp / chips))
+    assert trip.is_sharing(spec) == (nppn * ntpp > chips)
+
+
+def test_paper_mnist_table1():
+    """Table I: 2-GPU node, NPPN from 1..24, NTPP keeps cores bounded."""
+    spec = T.NodeSpec(chips_per_node=2, cores_per_node=40)
+    for nppn, ntpp in [(1, 40), (2, 20), (4, 10), (6, 6), (8, 5),
+                       (12, 3), (24, 1)]:
+        trip = T.Triples(1, nppn, ntpp)
+        assert nppn * ntpp <= 40  # never oversubscribe cores
+        p = T.plan(24, trip, spec)
+        # jobs per GPU balanced (12/12 at NPPN=24 per the paper)
+        load = p.chip_load()
+        if nppn >= 2:
+            assert load[(0, 0)] == load[(0, 1)]
+    # paper: NPPN=24 => 12 concurrent jobs per GPU
+    p = T.plan(24, T.Triples(1, 24, 1), spec)
+    assert p.chip_load() == {(0, 0): 12, (0, 1): 12}
+
+
+def test_exclusive_vs_sharing():
+    spec = T.NodeSpec(chips_per_node=4)
+    assert not T.Triples(1, 4, 1).is_sharing(spec)   # paper "normal" mode
+    assert T.Triples(1, 8, 1).is_sharing(spec)       # over-allocation
+    assert T.Triples(1, 4, 2).is_sharing(spec)       # via ntpp too
+
+
+def test_elastic_plan_subset_nodes():
+    trip = T.Triples(4, 2, 1)
+    p = T.plan(10, trip, alive_nodes=[0, 2, 3])       # node 1 is dead
+    nodes_used = {s.node for s in p.slots}
+    assert nodes_used == {0, 2, 3}
+    assert sorted(t for s in p.slots for t in s.task_ids) == list(range(10))
+
+
+def test_invalid_triples():
+    with pytest.raises(ValueError):
+        T.Triples(0, 1, 1)
+    with pytest.raises(ValueError):
+        T.plan(4, T.Triples(2, 1, 1), alive_nodes=[])
+
+
+def test_recommend_for_gpus():
+    spec = T.NodeSpec(chips_per_node=2, cores_per_node=40)
+    t1 = T.recommend_for_gpus(24, 1, spec, concurrent_per_chip=1)
+    assert (t1.nppn, t1.ntpp) == (2, 20)             # Table I row 2
+    t12 = T.recommend_for_gpus(24, 1, spec, concurrent_per_chip=12)
+    assert (t12.nppn, t12.ntpp) == (24, 1)           # Table I row 7
