@@ -1,0 +1,64 @@
+"""JAX version-compatibility shims.
+
+The code and tests target the current jax API; importing this module
+backfills the handful of names older jax (<= 0.4.x) is missing so the
+suite runs on whatever the container ships:
+
+  * ``jax.sharding.AxisType`` + the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` (older meshes have no axis-type concept — the
+    kwarg is dropped, which matches Auto semantics);
+  * ``jax.shard_map`` (still under ``jax.experimental`` in 0.4.x) and
+    its ``check_vma=`` kwarg (the old spelling is ``check_rep=``);
+  * ``jax.lax.axis_size`` (0.4.x only exposes the axis env internally).
+
+Import for side effects, before any of the shimmed names are used:
+
+    import repro.compat  # noqa: F401
+
+Idempotent; a no-op on jax versions that already have the real names.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):          # mirror of jax.sharding.AxisType
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(*args, axis_types=None, **kw):
+        return _make_mesh(*args, **kw)
+
+    jax.make_mesh = make_mesh
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(*args, **kw)
+
+    jax.shard_map = shard_map
+
+if not hasattr(jax.lax, "axis_size"):
+    from jax._src import core as _core
+
+    def axis_size(axis_name):
+        """Static size of a named mapped axis (newer jax.lax.axis_size)."""
+        return _core.get_axis_env().axis_size(axis_name)
+
+    jax.lax.axis_size = axis_size

@@ -6,6 +6,12 @@ from repro.core.autotune import auto_nppn, PackingDecision  # noqa: F401
 from repro.core.monitor import RunMonitor, StaticProfile, profile_fn  # noqa: F401
 from repro.core.mapreduce import llmapreduce  # noqa: F401
 from repro.core.scheduler import (  # noqa: F401
-    ClusterState, Task, TaskCtx, TriplesScheduler)
+    ClusterState, GangJob, Task, TaskCtx, Tenancy, TriplesScheduler)
+from repro.core.tenancy import (  # noqa: F401
+    AdmissionDecision, FairShareAccountant, JobQueue, MemoryAdmission,
+    PendingJob, TenantQuota)
+from repro.core.simulate import (  # noqa: F401
+    SimJob, SimReport, compare_modes, comparison_table, mixed_workload)
+from repro.core.monitor import TenantGauges  # noqa: F401
 from repro.core.faults import (  # noqa: F401
     FaultPolicy, NodeDown, TaskCrash, TaskOOM, inject_failures)

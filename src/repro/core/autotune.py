@@ -24,6 +24,8 @@ class PackingDecision:
     profile: StaticProfile              # at the chosen factor
     rejected: Optional[int] = None      # first factor that did NOT fit
     reason: str = ""
+    profile_single: Optional[StaticProfile] = None   # the k=1 probe (the
+                                        # per-lane admission footprint)
 
 
 def measure_packed(make_packed: Callable[[int], Callable], k: int,
@@ -64,7 +66,8 @@ def auto_nppn(make_packed: Callable[[int], Callable],
             break
     if hi is None:
         return PackingDecision(min(lo, max_factor), lo_prof,
-                               reason="hit max_factor, all fit")
+                               reason="hit max_factor, all fit",
+                               profile_single=prof1)
 
     # bisect (lo fits, hi doesn't)
     while hi - lo > 1:
@@ -75,7 +78,8 @@ def auto_nppn(make_packed: Callable[[int], Callable],
         else:
             hi = mid
     return PackingDecision(lo, lo_prof, rejected=hi,
-                           reason=f"k={hi} exceeds budget")
+                           reason=f"k={hi} exceeds budget",
+                           profile_single=prof1)
 
 
 def predict_oom(profile: StaticProfile, hbm_budget: float,

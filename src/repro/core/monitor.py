@@ -47,6 +47,8 @@ class StaticProfile:
 def profile_compiled(compiled) -> StaticProfile:
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax <= 0.4.x wraps the dict
+        ca = ca[0] if ca else {}
     return StaticProfile(
         argument_bytes=int(ma.argument_size_in_bytes),
         temp_bytes=int(ma.temp_size_in_bytes),
@@ -123,6 +125,78 @@ class RunMonitor:
         return {"steps": len(walls), "mean_s": float(walls.mean()),
                 "p50_s": float(np.median(walls)), "max_s": float(walls.max()),
                 "last_live_bytes": self.history[-1].live_bytes}
+
+
+# ---------------------------------------------------------------------------
+# per-tenant gauges (multi-tenant LLload — DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TenantGauge:
+    """Live per-tenant counters, the multi-user row of the LLload table."""
+    user: str
+    nodes_held: int = 0
+    lanes: int = 0                      # packed lanes currently resident
+    resident_bytes: int = 0
+    node_time: float = 0.0              # accumulated node-seconds/rounds
+    jobs_done: int = 0
+    jobs_rejected: int = 0
+    waits: List[float] = dataclasses.field(default_factory=list)
+
+
+class TenantGauges:
+    """Per-tenant resource gauges the scheduler updates at dispatch/release.
+
+    The paper's workflow is a human watching LLload for ONE job; under
+    tenancy an operator needs the same table split by user — who holds
+    which nodes, how many packed lanes, how much HBM, and the fair-share
+    usage each tenant has accumulated."""
+
+    def __init__(self):
+        self._g: Dict[str, TenantGauge] = {}
+
+    def gauge(self, user: str) -> TenantGauge:
+        if user not in self._g:
+            self._g[user] = TenantGauge(user=user)
+        return self._g[user]
+
+    def on_dispatch(self, user: str, nodes: int, lanes: int = 0,
+                    resident_bytes: int = 0, wait: float = 0.0):
+        g = self.gauge(user)
+        g.nodes_held += nodes
+        g.lanes += lanes
+        g.resident_bytes += resident_bytes
+        g.waits.append(wait)
+
+    def on_release(self, user: str, nodes: int, node_time: float,
+                   lanes: int = 0, resident_bytes: int = 0,
+                   rejected: bool = False):
+        g = self.gauge(user)
+        g.nodes_held = max(0, g.nodes_held - nodes)
+        g.lanes = max(0, g.lanes - lanes)
+        g.resident_bytes = max(0, g.resident_bytes - resident_bytes)
+        g.node_time += node_time
+        if rejected:
+            g.jobs_rejected += 1
+        else:
+            g.jobs_done += 1
+
+    def on_reject(self, user: str):
+        self.gauge(user).jobs_rejected += 1
+
+    def table(self) -> str:
+        """Render the per-tenant LLload-style snapshot."""
+        lines = [f"{'TENANT':12s} {'NODES':>5s} {'LANES':>5s} "
+                 f"{'HBM-USED':>10s} {'NODE-TIME':>10s} {'DONE':>4s} "
+                 f"{'REJ':>3s} {'MEAN-WAIT':>9s}"]
+        for user in sorted(self._g):
+            g = self._g[user]
+            mw = sum(g.waits) / len(g.waits) if g.waits else 0.0
+            lines.append(
+                f"{user:12s} {g.nodes_held:>5d} {g.lanes:>5d} "
+                f"{g.resident_bytes/1e9:>8.1f}GB {g.node_time:>10.1f} "
+                f"{g.jobs_done:>4d} {g.jobs_rejected:>3d} {mw:>9.1f}")
+        return "\n".join(lines)
 
 
 def llload_table(node_name: str, profiles: Dict[str, StaticProfile],

@@ -9,6 +9,12 @@ Semantics reproduced from the paper:
   * failures: per-task retry, OOM packing backoff, node loss re-planning,
     speculative re-execution of stragglers.
 
+Multi-tenancy (DESIGN.md §4): when constructed with a ``Tenancy`` bundle,
+``submit`` + ``run_queued`` route every allocation through the fair-share
+pending queue (FIFO + EASY backfill) with memory-aware admission, and
+gangs from different users execute concurrently on disjoint nodes —
+interleaved round-robin at task granularity, deterministically.
+
 Execution on this container is cooperative (slots interleave at task
 granularity, deterministic); the placement/accounting layer is exactly what
 a multi-host launcher would consume.
@@ -16,11 +22,16 @@ a multi-host launcher would consume.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import triples as T
+from repro.core import tenancy as ten
 from repro.core.faults import FaultPolicy, NodeDown, TaskCrash, TaskError, TaskOOM
+
+if False:                               # type-only; avoid jax import at load
+    from repro.core.monitor import TenantGauges
 
 
 @dataclasses.dataclass
@@ -60,6 +71,7 @@ class JobResult:
     events: List[Event]
     alloc_cycles: int                  # scheduler allocations performed
     wall_s: float
+    wait_rounds: int = 0               # rounds spent queued (tenancy path)
 
 
 class ClusterState:
@@ -74,10 +86,26 @@ class ClusterState:
     def alive(self) -> List[int]:
         return [i for i in range(self.n_nodes) if i not in self.down]
 
-    def allocate(self, user: str, n: int) -> Optional[List[int]]:
+    def free_count(self) -> int:
+        return sum(1 for i in self.alive() if self.owner[i] is None)
+
+    def held_counts(self) -> Dict[str, int]:
+        """Nodes currently held, per user (tenancy quota enforcement)."""
+        held: Dict[str, int] = {}
+        for i in self.alive():
+            u = self.owner[i]
+            if u is not None:
+                held[u] = held.get(u, 0) + 1
+        return held
+
+    def allocate(self, user: str, n: int,
+                 fresh: bool = False) -> Optional[List[int]]:
+        """Whole-node allocation. By default nodes already owned by this
+        user are reusable (the seed single-job semantics); ``fresh=True``
+        demands strictly unowned nodes — required when one user runs
+        several concurrent gangs (tenancy path) so they never share."""
         free = [i for i in self.alive() if self.owner[i] is None
-                or self.owner[i] == user]
-        # whole-node policy: nodes already owned by this user are reusable
+                or (not fresh and self.owner[i] == user)]
         if len(free) < n:
             return None
         got = free[:n]
@@ -94,13 +122,152 @@ class ClusterState:
         self.owner[node] = None
 
 
+# ---------------------------------------------------------------------------
+# per-gang runtime — shared by the blocking and the multi-tenant path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GangJob:
+    """One submitted triples job under tenancy."""
+    id: int
+    user: str
+    tasks: List[Task]
+    trip: T.Triples
+    bytes_per_lane: float = 0.0
+    state: str = "queued"              # queued|running|done|rejected
+    reject_reason: str = ""
+    result: Optional[JobResult] = None
+
+
+class _GangRun:
+    """Runtime state of one dispatched gang: plan, slot queues, retries.
+
+    ``step_round`` executes at most one task per slot, so several gangs
+    interleave deterministically when stepped in turn by ``run_queued``.
+    """
+
+    def __init__(self, sched: "TriplesScheduler", user: str,
+                 tasks: List[Task], trip: T.Triples, nodes: List[int]):
+        self.sched = sched
+        self.user = user
+        self.trip = trip
+        self.nodes = nodes
+        self.t_start = time.perf_counter()
+        self.results: Dict[int, Any] = {}
+        self.failed: Dict[int, str] = {}
+        self.by_id = {t.id: t for t in tasks}
+        plan = T.plan(len(tasks), trip, sched.cluster.node_spec,
+                      alive_nodes=nodes)
+        self.queues: Dict[T.SlotAssignment, List[int]] = {
+            s: list(s.task_ids) for s in plan.slots}
+        self.pending_retry: List[int] = []
+
+    @property
+    def finished(self) -> bool:
+        return not any(self.queues.values()) and not self.pending_retry
+
+    def remaining_rounds(self) -> int:
+        """Upper bound on rounds to completion (longest slot queue)."""
+        longest = max((len(q) for q in self.queues.values()), default=0)
+        return longest + (1 if self.pending_retry else 0)
+
+    def step_round(self) -> bool:
+        """One cooperative round: ≤1 task per slot, then retry handling.
+        Returns False when no progress is possible (deadlock guard)."""
+        cluster = self.sched.cluster
+        progressed = False
+        for slot, q in self.queues.items():
+            if slot.node in cluster.down:
+                orphans = [tid for tid in q if tid not in self.results]
+                q.clear()
+                self.pending_retry.extend(orphans)
+                continue
+            if not q:
+                continue
+            tid = q.pop(0)
+            progressed = True
+            self.sched._run_one(self.by_id[tid], slot, self.trip,
+                                self.results, self.failed, self.pending_retry)
+        if self.pending_retry:
+            self._replan()
+            return True
+        return progressed
+
+    def _replan(self):
+        """Node-loss / retry re-planning over this gang's alive nodes."""
+        cluster = self.sched.cluster
+        alive = [n for n in self.nodes if n not in cluster.down]
+        if not alive:
+            for tid in self.pending_retry:
+                self.failed[tid] = "no alive nodes"
+            self.pending_retry.clear()
+            for q in self.queues.values():
+                for tid in q:
+                    self.failed[tid] = "no alive nodes"
+            self.queues = {}
+            return
+        # drain EVERY outstanding queue too — the fresh plan covers
+        # all remaining work, not just the retried tasks
+        outstanding = list(self.pending_retry)
+        for q in self.queues.values():
+            outstanding.extend(q)
+        replanned = T.plan(len(outstanding), self.trip,
+                           cluster.node_spec, alive_nodes=alive)
+        self.sched._log("replan", tasks=list(outstanding), nodes=alive)
+        remap = {i: tid for i, tid in enumerate(outstanding)}
+        self.pending_retry = []
+        self.queues = {s: [remap[i] for i in s.task_ids]
+                       for s in replanned.slots}
+
+    def finish(self, alloc_cycles: int, wait_rounds: int = 0) -> JobResult:
+        cluster = self.sched.cluster
+        cluster.release([n for n in self.nodes if n not in cluster.down])
+        self.sched._log("release", nodes=self.nodes)
+        return JobResult(results=self.results, failed=self.failed,
+                         events=self.sched.events, alloc_cycles=alloc_cycles,
+                         wall_s=time.perf_counter() - self.t_start,
+                         wait_rounds=wait_rounds)
+
+
+# ---------------------------------------------------------------------------
+# tenancy bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Tenancy:
+    """Fair-share queue + admission control wired into the scheduler."""
+    queue: ten.JobQueue
+    admission: Optional[ten.MemoryAdmission] = None
+    gauges: Optional["TenantGauges"] = None    # core.monitor.TenantGauges
+
+    @classmethod
+    def create(cls, quotas: Optional[Dict[str, ten.TenantQuota]] = None,
+               node_spec: Optional[T.NodeSpec] = None,
+               admission_headroom: float = 0.9,
+               half_life: Optional[float] = None,
+               gauges: Optional["TenantGauges"] = None) -> "Tenancy":
+        acct = ten.FairShareAccountant(quotas, half_life=half_life)
+        adm = ten.MemoryAdmission(node_spec, headroom=admission_headroom) \
+            if node_spec is not None else ten.MemoryAdmission(
+                headroom=admission_headroom)
+        return cls(queue=ten.JobQueue(acct), admission=adm, gauges=gauges)
+
+    @property
+    def accountant(self) -> ten.FairShareAccountant:
+        return self.queue.accountant
+
+
 class TriplesScheduler:
     def __init__(self, cluster: ClusterState,
-                 policy: Optional[FaultPolicy] = None):
+                 policy: Optional[FaultPolicy] = None,
+                 tenancy: Optional[Tenancy] = None):
         self.cluster = cluster
         self.policy = policy or FaultPolicy()
+        self.tenancy = tenancy
         self.events: List[Event] = []
         self._alloc_cycles = 0
+        self._jobs: Dict[int, GangJob] = {}
+        self._next_job_id = 0
 
     # ------------------------------------------------------------------ util
     def _log(self, kind: str, **detail):
@@ -108,72 +275,149 @@ class TriplesScheduler:
 
     # ------------------------------------------------------- triples submit
     def run_triples_job(self, user: str, tasks: List[Task],
-                        trip: T.Triples) -> JobResult:
+                        trip: T.Triples,
+                        bytes_per_lane: float = 0.0) -> JobResult:
         """ONE allocation for the gang; child tasks run from the generated
-        plan. Returns when every task is done/failed-permanently."""
-        t_start = time.perf_counter()
-        nodes = None
-        while nodes is None:
-            nodes = self.cluster.allocate(user, trip.nnode)
-            if nodes is None:
+        plan. Returns when every task is done/failed-permanently. Under
+        tenancy, this routes through submit + run_queued (the allocation
+        passes the fair-share queue and admission control)."""
+        if self.tenancy is not None:
+            job = self.submit(user, tasks, trip, bytes_per_lane)
+            if job.state == "rejected":
+                if job.reject_reason.startswith("gang needs"):
+                    raise RuntimeError(job.reject_reason)
+                raise MemoryError(job.reject_reason)
+            self.run_queued()
+            if job.result is None:      # queue stalled: gang never dispatched
                 raise RuntimeError("insufficient free nodes for gang")
+            return job.result
+        nodes = self.cluster.allocate(user, trip.nnode)
+        if nodes is None:
+            raise RuntimeError("insufficient free nodes for gang")
         self._alloc_cycles += 1
-        self._log("alloc", user=user, nodes=nodes, triples=dataclasses.astuple(trip))
-
-        plan = T.plan(len(tasks), trip, self.cluster.node_spec,
-                      alive_nodes=nodes)
-        results: Dict[int, Any] = {}
-        failed: Dict[int, str] = {}
-        by_id = {t.id: t for t in tasks}
-
-        # cooperative interleave: round-robin one task from each slot
-        queues = {s: list(s.task_ids) for s in plan.slots}
-        pending_retry: List[int] = []
-        while any(queues.values()) or pending_retry:
-            progressed = False
-            for slot, q in queues.items():
-                if slot.node in self.cluster.down:
-                    # elastic: move remaining work to alive nodes
-                    orphans = [tid for tid in q if tid not in results]
-                    q.clear()
-                    pending_retry.extend(orphans)
-                    continue
-                if not q:
-                    continue
-                tid = q.pop(0)
-                progressed = True
-                self._run_one(by_id[tid], slot, trip, results, failed,
-                              pending_retry)
-            if pending_retry:
-                alive = [n for n in self.cluster.alive()
-                         if n in {s.node for s in plan.slots}
-                         or self.cluster.owner.get(n) in (None, user)]
-                if not alive:
-                    for tid in pending_retry:
-                        failed[tid] = "no alive nodes"
-                    pending_retry.clear()
-                    break
-                # drain EVERY outstanding queue too — the fresh plan covers
-                # all remaining work, not just the retried tasks
-                outstanding = list(pending_retry)
-                for q in queues.values():
-                    outstanding.extend(q)
-                replan = T.plan(len(outstanding), trip,
-                                self.cluster.node_spec, alive_nodes=alive)
-                self._log("replan", tasks=list(outstanding), nodes=alive)
-                remap = {i: tid for i, tid in enumerate(outstanding)}
-                pending_retry = []
-                queues = {s: [remap[i] for i in s.task_ids]
-                          for s in replan.slots}
-                continue
-            if not progressed:
+        self._log("alloc", user=user, nodes=nodes,
+                  triples=dataclasses.astuple(trip))
+        run = _GangRun(self, user, tasks, trip, nodes)
+        while not run.finished:
+            if not run.step_round():
                 break
+        return run.finish(self._alloc_cycles)
 
-        self.cluster.release([n for n in nodes if n not in self.cluster.down])
-        self._log("release", nodes=nodes)
-        return JobResult(results=results, failed=failed, events=self.events,
-                         alloc_cycles=self._alloc_cycles,
-                         wall_s=time.perf_counter() - t_start)
+    # ----------------------------------------------------- multi-tenant path
+    def submit(self, user: str, tasks: List[Task], trip: T.Triples,
+               bytes_per_lane: float = 0.0) -> GangJob:
+        """Enqueue a gang job for the fair-share queue (requires tenancy).
+
+        Memory-aware admission runs HERE — an over-footprint pack_factor is
+        rejected before it ever holds a node (vs. the paper's 21/48 tasks
+        dead on CUDA OOM after dispatch)."""
+        if self.tenancy is None:
+            raise RuntimeError("submit() requires a Tenancy; use "
+                               "run_triples_job for the single-user path")
+        job = GangJob(id=self._next_job_id, user=user, tasks=tasks,
+                      trip=trip, bytes_per_lane=bytes_per_lane)
+        self._next_job_id += 1
+        self._jobs[job.id] = job
+        if trip.nnode > self.cluster.n_nodes:
+            job.state = "rejected"
+            job.reject_reason = (f"gang needs {trip.nnode} nodes, cluster "
+                                 f"has {self.cluster.n_nodes}")
+            self._log("reject", job=job.id, user=user,
+                      reason=job.reject_reason)
+            return job
+        adm = self.tenancy.admission
+        if adm is not None and bytes_per_lane > 0:
+            decision = adm.admit(trip, bytes_per_lane)
+            if not decision.admitted:
+                job.state = "rejected"
+                job.reject_reason = decision.reason
+                self._log("reject", job=job.id, user=user,
+                          reason=decision.reason)
+                if self.tenancy.gauges is not None:
+                    self.tenancy.gauges.on_reject(user)
+                return job
+        est = math.ceil(len(tasks) / trip.total_slots) if tasks else 0
+        self.tenancy.queue.push(ten.PendingJob(
+            id=job.id, user=user, n_nodes=trip.nnode,
+            submit_seq=self.tenancy.queue.next_seq(),
+            est_duration=float(est), bytes_per_lane=bytes_per_lane,
+            payload=job))
+        self._log("submit", job=job.id, user=user, nodes=trip.nnode)
+        return job
+
+    def run_queued(self) -> Dict[int, JobResult]:
+        """Drain the pending queue, executing admitted gangs CONCURRENTLY.
+
+        Each cooperative round: (1) dispatch every job the fair-share +
+        backfill policy allows onto strictly-disjoint fresh nodes, (2) step
+        every active gang one task-round. Completed gangs release nodes and
+        charge node-rounds to their tenant's fair-share usage. Deterministic
+        — no threads, no clocks in the policy path."""
+        tn = self.tenancy
+        if tn is None:
+            raise RuntimeError("run_queued() requires a Tenancy")
+        active: Dict[int, Tuple[GangJob, _GangRun]] = {}
+        dispatch_round: Dict[int, int] = {}
+        submit_round: Dict[int, int] = {j.id: 0 for j in tn.queue.ordered()}
+        done: Dict[int, JobResult] = {}
+        rnd = 0
+        while len(tn.queue) or active:
+            # dispatch phase
+            running_view = [(run.trip.nnode, float(run.remaining_rounds()))
+                            for _, run in active.values()]
+            for pj in tn.queue.pop_dispatchable(
+                    self.cluster.free_count(), running_view,
+                    held_by_user=self.cluster.held_counts()):
+                job: GangJob = pj.payload
+                nodes = self.cluster.allocate(job.user, job.trip.nnode,
+                                              fresh=True)
+                if nodes is None:       # race with node failure: requeue
+                    tn.queue.push(pj)
+                    continue
+                self._alloc_cycles += 1
+                self._log("alloc", user=job.user, nodes=nodes, job=job.id,
+                          triples=dataclasses.astuple(job.trip))
+                job.state = "running"
+                active[job.id] = (job, _GangRun(self, job.user, job.tasks,
+                                                job.trip, nodes))
+                dispatch_round[job.id] = rnd
+                if tn.gauges is not None:
+                    tn.gauges.on_dispatch(
+                        job.user, nodes=job.trip.nnode,
+                        lanes=job.trip.total_slots,
+                        resident_bytes=int(job.bytes_per_lane
+                                           * job.trip.total_slots),
+                        wait=float(rnd - submit_round.get(job.id, 0)))
+            if not active:
+                if len(tn.queue):       # nothing dispatchable and nothing
+                    self._log("stalled",  # running: cluster cannot serve
+                              queued=[j.id for j in tn.queue.ordered()])
+                    break
+                continue
+            # execution phase: one task-round per active gang
+            for jid in list(active):
+                job, run = active[jid]
+                if not run.finished:
+                    run.step_round()
+                if run.finished:
+                    wait = dispatch_round[jid] - submit_round.get(jid, 0)
+                    job.result = run.finish(self._alloc_cycles,
+                                            wait_rounds=wait)
+                    job.state = "done"
+                    rounds_held = max(1, rnd + 1 - dispatch_round[jid])
+                    tn.accountant.charge(job.user,
+                                         job.trip.nnode * rounds_held)
+                    if tn.gauges is not None:
+                        tn.gauges.on_release(
+                            job.user, nodes=job.trip.nnode,
+                            node_time=float(job.trip.nnode * rounds_held),
+                            lanes=job.trip.total_slots,
+                            resident_bytes=int(job.bytes_per_lane
+                                               * job.trip.total_slots))
+                    done[jid] = job.result
+                    del active[jid]
+            rnd += 1
+        return done
 
     def _run_one(self, task: Task, slot: T.SlotAssignment, trip: T.Triples,
                  results: dict, failed: dict, pending_retry: list):

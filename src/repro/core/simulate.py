@@ -1,0 +1,285 @@
+"""Deterministic event-driven multi-tenant cluster simulation.
+
+Replays a mixed workload (parametric sweeps + gang training + batch
+serving) against the whole-node cluster under two policies and makes the
+paper's "sharing vs exclusive" claim benchmarkable under contention:
+
+  * ``exclusive`` — the LLSC default the paper starts from: one task per
+    chip (NPPN clamped to chips/NTPP), FIFO dispatch, no backfill;
+  * ``shared``    — triples-mode packing (pack_factor > 1 lanes per chip)
+    with fair-share ordering, EASY backfill and memory-aware admission
+    from core/tenancy.py — the same policy objects the live scheduler
+    consumes, so simulation and dispatch cannot drift apart.
+
+Time is virtual seconds driven by an event heap (submit/finish); nothing
+here reads a clock or RNG, so a replay is bit-identical. Reported metrics
+(DESIGN.md §4.5):
+
+  * per-user mean/max wait (dispatch − submit);
+  * allocation utilization — busy node-seconds over nodes × makespan;
+  * effective utilization — useful chip-seconds demanded by the tasks
+    over chip capacity (the paper's "GPU load" framing: exclusive mode
+    leaves chips idle inside an allocation, packing fills them);
+  * throughput (tasks/second) and total makespan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import tenancy as ten
+from repro.core import triples as T
+
+
+@dataclasses.dataclass(frozen=True)
+class SimJob:
+    """One job of the replayed workload."""
+    id: int
+    user: str
+    submit_t: float
+    kind: str                           # sweep|train|serve
+    n_tasks: int
+    task_s: float                       # occupancy seconds per task
+    trip: T.Triples
+    bytes_per_lane: float = 0.0
+    load_frac: float = 1.0              # chip load one task achieves (paper
+                                        # Fig 2: a lone small task ~25%)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimJobStats:
+    job: SimJob
+    start_t: float
+    end_t: float
+    pack_factor: int
+    eff_trip: T.Triples
+
+    @property
+    def wait_s(self) -> float:
+        return self.start_t - self.job.submit_t
+
+
+@dataclasses.dataclass
+class SimReport:
+    mode: str
+    n_nodes: int
+    makespan: float
+    stats: List[SimJobStats]
+    rejected: List[Tuple[SimJob, str]]
+    node_util: float                    # busy node-s / (nodes × makespan)
+    effective_util: float               # useful chip-s / (chips × makespan)
+    throughput: float                   # completed tasks / makespan
+
+    def mean_wait(self, user: Optional[str] = None) -> float:
+        ws = [s.wait_s for s in self.stats
+              if user is None or s.job.user == user]
+        return sum(ws) / len(ws) if ws else 0.0
+
+    def max_wait(self, user: Optional[str] = None) -> float:
+        ws = [s.wait_s for s in self.stats
+              if user is None or s.job.user == user]
+        return max(ws) if ws else 0.0
+
+    def users(self) -> List[str]:
+        return sorted({s.job.user for s in self.stats})
+
+
+def effective_triples(trip: T.Triples, node_spec: T.NodeSpec, mode: str,
+                      admission: Optional[ten.MemoryAdmission],
+                      bytes_per_lane: float) -> T.Triples:
+    """What actually runs. Exclusive mode clamps to one lane per chip;
+    shared mode keeps the request but the admission cap (from the per-lane
+    footprint) may shrink NPPN before dispatch."""
+    if mode == "exclusive":
+        nppn = max(1, node_spec.chips_per_node // trip.ntpp)
+        return T.Triples(trip.nnode, min(trip.nppn, nppn), trip.ntpp)
+    if admission is not None and bytes_per_lane > 0:
+        return admission.clamp(trip, bytes_per_lane)
+    return trip
+
+
+def job_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
+                 pack_slowdown: float) -> float:
+    """Virtual runtime: waves of slots, each wave slowed by co-residency.
+
+    pack lanes share a chip's MXU/HBM bandwidth, so a wave of packed lanes
+    runs at ``1 + pack_slowdown × (pack − 1)`` of the exclusive wave time —
+    sublinear, which is exactly why packing wins throughput (paper Fig. 7:
+    packed lanes hide each other's dispatch gaps)."""
+    waves = math.ceil(job.n_tasks / eff.total_slots)
+    pack = eff.pack_factor(node_spec)
+    return waves * job.task_s * (1.0 + pack_slowdown * (pack - 1))
+
+
+def simulate(jobs: List[SimJob], n_nodes: int,
+             node_spec: Optional[T.NodeSpec] = None, *,
+             mode: str = "shared",
+             quotas: Optional[Dict[str, ten.TenantQuota]] = None,
+             admission: Optional[ten.MemoryAdmission] = None,
+             backfill: bool = True,
+             pack_slowdown: float = 0.15,
+             half_life: Optional[float] = None) -> SimReport:
+    """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes."""
+    if mode not in ("shared", "exclusive"):
+        raise ValueError(f"mode must be shared|exclusive, got {mode!r}")
+    node_spec = node_spec or T.NodeSpec()
+    if mode == "exclusive":             # the baseline has no fair-share or
+        quotas, admission, backfill = None, None, False   # admission layer
+    acct = ten.FairShareAccountant(quotas, half_life=half_life)
+    queue = ten.JobQueue(acct)
+    pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
+    rejected: List[Tuple[SimJob, str]] = []
+
+    # event heap: (t, seq, kind, payload)
+    heap: List[Tuple[float, int, str, object]] = []
+    seq = 0
+    for job in sorted(jobs, key=lambda j: (j.submit_t, j.id)):
+        heapq.heappush(heap, (job.submit_t, seq, "submit", job))
+        seq += 1
+
+    free = n_nodes
+    running: Dict[int, Tuple[int, float, float]] = {}  # jid -> (nodes, end, start)
+    held: Dict[str, int] = {}
+    stats: List[SimJobStats] = []
+    busy_node_s = 0.0
+    useful_chip_s = 0.0
+    completed_tasks = 0
+    makespan = 0.0
+
+    def dispatch(now: float):
+        nonlocal free, seq
+        running_view = [(n, end - now) for n, end, _ in running.values()]
+        for pj in queue.pop_dispatchable(free, running_view,
+                                         held_by_user=held,
+                                         backfill=backfill):
+            job, eff, duration = pending_payload.pop(pj.id)
+            free -= eff.nnode
+            held[job.user] = held.get(job.user, 0) + eff.nnode
+            end = now + duration
+            running[job.id] = (eff.nnode, end, now)
+            stats.append(SimJobStats(job=job, start_t=now, end_t=end,
+                                     pack_factor=eff.pack_factor(node_spec),
+                                     eff_trip=eff))
+            heapq.heappush(heap, (end, seq, "finish", job))
+            seq += 1
+
+    while heap:
+        t, _, kind, payload = heapq.heappop(heap)
+        acct.decay_to(t)
+        job: SimJob = payload
+        if kind == "submit":
+            try:
+                eff = effective_triples(job.trip, node_spec, mode,
+                                        admission, job.bytes_per_lane)
+            except MemoryError as e:
+                rejected.append((job, str(e)))
+                continue
+            if eff.nnode > n_nodes:
+                rejected.append((job, f"needs {eff.nnode} > {n_nodes} nodes"))
+                continue
+            duration = job_duration(job, eff, node_spec, pack_slowdown)
+            pending_payload[job.id] = (job, eff, duration)
+            queue.push(ten.PendingJob(
+                id=job.id, user=job.user, n_nodes=eff.nnode,
+                submit_seq=queue.next_seq(), submit_t=job.submit_t,
+                est_duration=duration, bytes_per_lane=job.bytes_per_lane))
+        else:                           # finish
+            n, end, start = running.pop(job.id)
+            free += n
+            held[job.user] = held.get(job.user, 0) - n
+            acct.charge(job.user, n * (end - start))   # fair-share usage
+            makespan = max(makespan, end)
+        dispatch(t)
+
+    for pj in queue.ordered():          # drained heap, still queued: these
+        job, _, _ = pending_payload.pop(pj.id)   # can never dispatch
+        rejected.append((job, "never dispatched (quota or capacity)"))
+
+    for s in stats:                     # account completed work
+        busy_node_s += s.eff_trip.nnode * (s.end_t - s.start_t)
+        useful_chip_s += (s.job.n_tasks * s.job.task_s * s.job.trip.ntpp
+                          * s.job.load_frac)
+        completed_tasks += s.job.n_tasks
+
+    chips = n_nodes * node_spec.chips_per_node
+    return SimReport(
+        mode=mode, n_nodes=n_nodes, makespan=makespan, stats=stats,
+        rejected=rejected,
+        node_util=busy_node_s / (n_nodes * makespan) if makespan else 0.0,
+        effective_util=useful_chip_s / (chips * makespan) if makespan else 0.0,
+        throughput=completed_tasks / makespan if makespan else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# workload builders (deterministic — no RNG)
+# ---------------------------------------------------------------------------
+
+def mixed_workload(node_spec: Optional[T.NodeSpec] = None, *,
+                   n_sweep_jobs: int = 6, sweep_tasks: int = 64,
+                   n_train_jobs: int = 2, train_nodes: int = 4,
+                   n_serve_jobs: int = 4,
+                   inter_arrival_s: float = 20.0) -> List[SimJob]:
+    """The paper's facility mix, three tenants:
+
+      * alice — parametric sweeps: many tiny tasks, heavy over-allocation
+        (NPPN = 4 × chips), small per-lane footprint. The triples headline.
+      * bob   — gang training: whole nodes, NTPP = chips (one big task per
+        node), long-running. Creates the contention sweeps backfill around.
+      * carol — batch serving: short medium jobs, modest packing.
+    """
+    node_spec = node_spec or T.NodeSpec()
+    cpn = node_spec.chips_per_node
+    jobs: List[SimJob] = []
+    jid = 0
+
+    def add(user, kind, submit_t, n_tasks, task_s, trip, bpl, load):
+        nonlocal jid
+        jobs.append(SimJob(id=jid, user=user, submit_t=submit_t, kind=kind,
+                           n_tasks=n_tasks, task_s=task_s, trip=trip,
+                           bytes_per_lane=bpl, load_frac=load))
+        jid += 1
+
+    for i in range(n_sweep_jobs):
+        add("alice", "sweep", i * inter_arrival_s, sweep_tasks, 2.0,
+            T.Triples(nnode=1, nppn=4 * cpn, ntpp=1),
+            bpl=1.5e9, load=0.25)       # small model: 10 lanes fit a chip,
+                                        # one lane leaves the chip 75% idle
+    for i in range(n_train_jobs):
+        add("bob", "train", 10.0 + i * 3 * inter_arrival_s, train_nodes, 60.0,
+            T.Triples(nnode=train_nodes, nppn=1, ntpp=cpn),
+            bpl=0.0, load=1.0)          # whole-node job, no packing
+    for i in range(n_serve_jobs):
+        add("carol", "serve", 5.0 + i * 1.5 * inter_arrival_s, 2 * cpn, 4.0,
+            T.Triples(nnode=1, nppn=2 * cpn, ntpp=1),
+            bpl=4e9, load=0.4)          # pack 2 fits, pack 4 would not
+    return jobs
+
+
+def compare_modes(jobs: List[SimJob], n_nodes: int,
+                  node_spec: Optional[T.NodeSpec] = None,
+                  **kw) -> Dict[str, SimReport]:
+    """Run the same workload under both policies."""
+    node_spec = node_spec or T.NodeSpec()
+    admission = kw.pop("admission", ten.MemoryAdmission(node_spec))
+    return {
+        "exclusive": simulate(jobs, n_nodes, node_spec, mode="exclusive",
+                              **kw),
+        "shared": simulate(jobs, n_nodes, node_spec, mode="shared",
+                           admission=admission, **kw),
+    }
+
+
+def comparison_table(reports: Dict[str, SimReport]) -> str:
+    """Render the sharing-vs-exclusive table (docs/BENCHMARKS.md)."""
+    users = sorted({u for r in reports.values() for u in r.users()})
+    lines = [f"{'MODE':>10s} {'NODE-UTIL':>10s} {'EFF-UTIL':>9s} "
+             f"{'TASKS/S':>8s} {'MAKESPAN':>9s} {'MEAN-WAIT':>10s} "
+             + " ".join(f"{('wait:' + u):>12s}" for u in users)]
+    for name, r in reports.items():
+        lines.append(
+            f"{name:>10s} {r.node_util:>9.1%} {r.effective_util:>8.1%} "
+            f"{r.throughput:>8.2f} {r.makespan:>8.0f}s {r.mean_wait():>9.0f}s "
+            + " ".join(f"{r.mean_wait(u):>11.0f}s" for u in users))
+    return "\n".join(lines)

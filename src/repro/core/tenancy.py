@@ -1,0 +1,279 @@
+"""Multi-tenant fair-share scheduling with memory-aware admission control.
+
+The paper's triples mode exists because the LLSC whole-node policy strands
+capacity when tasks are small — but the seed scheduler still served ONE
+user at a time, so the multi-tenant utilization story (the paper's actual
+economic motivation, §I) was unmodeled. This module adds the three pieces
+a shared facility needs (DESIGN.md §4):
+
+  * fair-share accounting — per-tenant decayed usage over share weight
+    orders the pending queue, so a light user is not starved by a heavy
+    one (the LLSC "fairshare" knob);
+  * a pending-job queue with FIFO + EASY backfill — the head-of-line gang
+    reserves capacity at its *shadow time* (earliest instant enough nodes
+    free up); smaller triples jobs may jump the queue only if they fit in
+    the spare nodes at that instant or finish before it, so backfill can
+    NEVER delay the waiting gang;
+  * memory-aware admission control — the per-lane HBM footprint
+    (packing.memory_per_lane) caps pack_factor per chip BEFORE dispatch,
+    replacing the paper's observed failure mode (21/48 tasks dead on CUDA
+    OOM) with an up-front admit/clamp/reject decision.
+
+Everything here is pure accounting over ``ClusterState`` — the scheduler
+(core/scheduler.py) and the event-driven simulator (core/simulate.py) both
+consume it, so live dispatch and replayed workloads share one policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import triples as T
+
+
+# ---------------------------------------------------------------------------
+# fair-share accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Policy knobs for one tenant."""
+    share: float = 1.0                  # fair-share weight (bigger = more)
+    max_nodes: Optional[int] = None     # hard cap on concurrently held nodes
+
+    def __post_init__(self):
+        if self.share <= 0:
+            raise ValueError(f"share must be positive, got {self.share}")
+
+
+class FairShareAccountant:
+    """Per-tenant normalized usage; orders the queue.
+
+    Usage is node-seconds (simulator) or node-rounds (live cooperative
+    scheduler), exponentially decayed with ``half_life`` so old consumption
+    stops counting against a tenant — the standard Slurm/LLSC decay model.
+    Priority key is ``usage / share``: lowest goes first, FIFO breaks ties.
+    """
+
+    def __init__(self, quotas: Optional[Dict[str, TenantQuota]] = None,
+                 half_life: Optional[float] = None):
+        self.quotas = dict(quotas or {})
+        self.half_life = half_life
+        self._usage: Dict[str, float] = {}
+        self._last_decay: float = 0.0
+
+    def quota(self, user: str) -> TenantQuota:
+        return self.quotas.get(user, TenantQuota())
+
+    def usage(self, user: str) -> float:
+        return self._usage.get(user, 0.0)
+
+    def decay_to(self, now: float):
+        """Apply exponential decay up to ``now`` (monotone clock)."""
+        if self.half_life is None or now <= self._last_decay:
+            self._last_decay = max(self._last_decay, now)
+            return
+        factor = 0.5 ** ((now - self._last_decay) / self.half_life)
+        for u in self._usage:
+            self._usage[u] *= factor
+        self._last_decay = now
+
+    def charge(self, user: str, node_time: float):
+        """Record ``node_time`` node-seconds/rounds of consumption."""
+        self._usage[user] = self._usage.get(user, 0.0) + node_time
+
+    def priority_key(self, user: str, submit_seq: int) -> Tuple[float, int]:
+        """Sort key: (normalized usage, submit order). Lower = sooner."""
+        return (self.usage(user) / self.quota(user).share, submit_seq)
+
+
+# ---------------------------------------------------------------------------
+# memory-aware admission control
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    admitted: bool
+    pack_factor: int                    # granted lanes per chip (0 if rejected)
+    max_pack: int                       # cap implied by the footprint
+    reason: str = ""
+
+
+class MemoryAdmission:
+    """Cap pack_factor per chip from the per-lane HBM footprint.
+
+    ``bytes_per_lane`` is what ``packing.memory_per_lane`` reports for the
+    compiled single-lane step (args + temps + outputs). The cap is
+
+        max_pack = floor(headroom * hbm_per_chip / bytes_per_lane)
+
+    so admission happens before dispatch instead of relying on OOM backoff
+    after the fact (on TPU a packed-program OOM kills ALL lanes at once,
+    so the predictive guard is mandatory — DESIGN.md §4.3).
+    """
+
+    def __init__(self, node_spec: Optional[T.NodeSpec] = None,
+                 headroom: float = 0.9):
+        if not 0 < headroom <= 1:
+            raise ValueError(f"headroom must be in (0, 1], got {headroom}")
+        self.node_spec = node_spec or T.NodeSpec()
+        self.headroom = headroom
+
+    def max_pack(self, bytes_per_lane: float) -> int:
+        """Largest lanes-per-chip count the footprint allows (0 = none)."""
+        if bytes_per_lane <= 0:
+            return 10**9                # unknown footprint: unconstrained
+        budget = self.headroom * self.node_spec.hbm_per_chip
+        return int(budget // bytes_per_lane)
+
+    def _over_budget_reason(self, bytes_per_lane: float) -> str:
+        return (f"one lane needs {bytes_per_lane/1e6:.1f} MB > "
+                f"{self.headroom:.0%} of "
+                f"{self.node_spec.hbm_per_chip/1e6:.1f} MB/chip; "
+                f"increase NTPP")
+
+    def require_fits(self, bytes_per_lane: float) -> int:
+        """max_pack, raising MemoryError when even one lane cannot fit."""
+        cap = self.max_pack(bytes_per_lane)
+        if cap < 1:
+            raise MemoryError(self._over_budget_reason(bytes_per_lane))
+        return cap
+
+    def admit(self, trip: T.Triples, bytes_per_lane: float) -> AdmissionDecision:
+        """Admit/reject the triples' implied pack_factor as requested."""
+        cap = self.max_pack(bytes_per_lane)
+        want = trip.pack_factor(self.node_spec)
+        if cap < 1:
+            return AdmissionDecision(
+                False, 0, cap, self._over_budget_reason(bytes_per_lane))
+        if want > cap:
+            return AdmissionDecision(
+                False, 0, cap,
+                f"pack_factor {want} exceeds footprint cap {cap}")
+        return AdmissionDecision(True, want, cap, "fits")
+
+    def clamp(self, trip: T.Triples, bytes_per_lane: float) -> T.Triples:
+        """Largest admissible triples ≤ the request (shrink NPPN).
+
+        Raises MemoryError when even a single lane per chip cannot fit.
+        """
+        cap = self.require_fits(bytes_per_lane)
+        if trip.pack_factor(self.node_spec) <= cap:
+            return trip
+        cpn = self.node_spec.chips_per_node
+        nppn = max(1, (cap * cpn) // trip.ntpp)
+        return T.Triples(nnode=trip.nnode, nppn=nppn, ntpp=trip.ntpp)
+
+
+# ---------------------------------------------------------------------------
+# pending-job queue: fair-share order, FIFO head reservation, EASY backfill
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PendingJob:
+    """One gang job waiting for dispatch."""
+    id: int
+    user: str
+    n_nodes: int
+    submit_seq: int
+    submit_t: float = 0.0
+    est_duration: float = 0.0           # rounds (live) or seconds (sim)
+    bytes_per_lane: float = 0.0
+    payload: object = None              # scheduler Tasks / SimJob / anything
+
+
+def shadow_analysis(free: int, head_need: int,
+                    running: Sequence[Tuple[int, float]]) -> Tuple[float, int]:
+    """EASY-backfill reservation for the head-of-line gang.
+
+    ``running`` is [(nodes_held, remaining_time)] for each active job.
+    Returns ``(shadow_time, spare_nodes)``: the earliest time at which
+    ``head_need`` nodes are simultaneously free, and how many nodes beyond
+    the head's need are free at that instant. A backfill candidate is safe
+    iff it fits in the spare nodes (it cannot collide with the reservation)
+    or it completes before the shadow time (it returns its nodes in time).
+    """
+    if free >= head_need:
+        return (0.0, free - head_need)
+    avail = free
+    shadow = math.inf
+    by_finish = sorted(running, key=lambda r: r[1])
+    for nodes_held, remaining in by_finish:
+        avail += nodes_held
+        if avail >= head_need:
+            shadow = remaining
+            break
+    return (shadow, max(0, avail - head_need))
+
+
+class JobQueue:
+    """Fair-share-ordered pending queue with starvation-free backfill."""
+
+    def __init__(self, accountant: Optional[FairShareAccountant] = None):
+        self.accountant = accountant or FairShareAccountant()
+        self._pending: List[PendingJob] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def push(self, job: PendingJob):
+        self._pending.append(job)
+
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def ordered(self) -> List[PendingJob]:
+        """Pending jobs in fair-share order (head of line first)."""
+        return sorted(self._pending,
+                      key=lambda j: self.accountant.priority_key(
+                          j.user, j.submit_seq))
+
+    def pop_dispatchable(self, free: int,
+                         running: Sequence[Tuple[int, float]],
+                         held_by_user: Optional[Dict[str, int]] = None,
+                         backfill: bool = True) -> List[PendingJob]:
+        """Remove and return every job that may start NOW on ``free`` nodes.
+
+        Dispatch loop: take jobs in fair-share order while they fit; once
+        the head does not fit it reserves its shadow slot, and only safe
+        backfill candidates (see shadow_analysis) may pass it. Per-tenant
+        ``max_nodes`` caps are enforced against ``held_by_user``.
+        """
+        held = dict(held_by_user or {})
+        run = list(running)
+        out: List[PendingJob] = []
+        blocked_head: Optional[PendingJob] = None
+        shadow, spare = math.inf, 0
+        for job in self.ordered():
+            cap = self.accountant.quota(job.user).max_nodes
+            if cap is not None and held.get(job.user, 0) + job.n_nodes > cap:
+                continue                # over quota: skip, do not block queue
+            if blocked_head is None:
+                if job.n_nodes <= free:
+                    out.append(job)
+                    free -= job.n_nodes
+                    held[job.user] = held.get(job.user, 0) + job.n_nodes
+                    run.append((job.n_nodes, job.est_duration))
+                    continue
+                blocked_head = job
+                shadow, spare = shadow_analysis(free, job.n_nodes, run)
+                if not backfill:
+                    break
+                continue
+            # behind a reservation: EASY backfill rule only
+            if job.n_nodes > free:
+                continue
+            fits_spare = job.n_nodes <= spare
+            ends_in_time = (job.est_duration > 0
+                            and job.est_duration <= shadow)
+            if fits_spare or ends_in_time:
+                out.append(job)
+                free -= job.n_nodes
+                spare -= min(spare, job.n_nodes) if fits_spare else 0
+                held[job.user] = held.get(job.user, 0) + job.n_nodes
+        for job in out:
+            self._pending.remove(job)
+        return out

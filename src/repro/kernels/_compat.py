@@ -1,0 +1,7 @@
+"""Pallas-TPU version-compatibility aliases (keep kernels importable on
+both jax <= 0.4.x and >= 0.5)."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _pg_kernel(x_ref, w_ref, o_ref, acc_scr):
     ki = pl.program_id(3)
@@ -62,7 +64,7 @@ def packed_gemm(x: jax.Array, w: jax.Array, *, block_m: int = 128,
         out_specs=pl.BlockSpec((1, bm, bn), lambda j, i, n, k: (j, i, n)),
         out_shape=jax.ShapeDtypeStruct((J, Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

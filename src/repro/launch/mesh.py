@@ -3,6 +3,8 @@ never touch jax device state (the dry-run sets device-count flags first)."""
 from __future__ import annotations
 
 import jax
+
+import repro.compat  # noqa: F401  (backfills AxisType / axis_types on old jax)
 from jax.sharding import AxisType
 
 

@@ -19,7 +19,8 @@ from repro import optim
 from repro.checkpoint import Checkpointer
 from repro.core import autotune, packing, triples as T
 from repro.core.faults import FaultPolicy, TaskOOM
-from repro.core.monitor import RunMonitor
+from repro.core.monitor import RunMonitor, TenantGauges
+from repro.core.tenancy import MemoryAdmission
 from repro.launch.train import make_train_step
 from repro.models.model import Model
 
@@ -37,6 +38,8 @@ class SweepResult:
     wall_s: float
     pack_factor: int
     backoffs: int = 0
+    bytes_per_lane: int = 0             # admission footprint (0 = unprobed)
+    admission_capped: bool = False      # pack shrunk by MemoryAdmission
 
 
 def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
@@ -46,8 +49,16 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
               max_pack: Optional[int] = None,
               checkpoint_dir: Optional[str] = None,
               policy: Optional[FaultPolicy] = None,
-              opt: Optional[optim.Optimizer] = None) -> SweepResult:
-    """Train all tasks; packing factor chosen by the memory guard."""
+              opt: Optional[optim.Optimizer] = None,
+              admission: Optional[MemoryAdmission] = None,
+              tenant: str = "default",
+              gauges: Optional[TenantGauges] = None) -> SweepResult:
+    """Train all tasks; packing factor chosen by the memory guard.
+
+    With ``admission`` set, the per-lane footprint of the compiled
+    single-lane step caps the packing factor BEFORE the first wave runs
+    (multi-tenant admission control, DESIGN.md §4.3); ``gauges`` charges
+    the waves to ``tenant`` in the shared per-tenant LLload table."""
     policy = policy or FaultPolicy()
     opt = opt or optim.adamw(weight_decay=0.0)
     step_fn = make_train_step(model, opt)
@@ -56,25 +67,44 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
     n = len(tasks)
     if max_pack is None:
         max_pack = n
+
+    def make_packed(k):
+        return jax.vmap(step_fn)
+
+    def example_args(k):
+        keys = jax.random.split(jax.random.PRNGKey(0), k)
+        p = jax.vmap(model.init)(keys)
+        o = jax.vmap(opt.init)(p)
+        b = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (k, *x.shape)),
+            jax.tree_util.tree_map(jnp.asarray, batch_fn(0, 0)))
+        lr = jnp.zeros((k,), jnp.float32)
+        return (p, o, b, lr)
+
+    single_profile = None
     if hbm_budget is not None:
-        def make_packed(k):
-            return jax.vmap(step_fn)
-
-        def example_args(k):
-            keys = jax.random.split(jax.random.PRNGKey(0), k)
-            p = jax.vmap(model.init)(keys)
-            o = jax.vmap(opt.init)(p)
-            b = jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(x, (k, *x.shape)),
-                jax.tree_util.tree_map(jnp.asarray, batch_fn(0, 0)))
-            lr = jnp.zeros((k,), jnp.float32)
-            return (p, o, b, lr)
-
         decision = autotune.auto_nppn(make_packed, example_args,
                                       hbm_budget, max_factor=max_pack)
         pack = decision.nppn_per_chip
+        single_profile = decision.profile_single
     else:
         pack = min(max_pack, n)
+
+    # ---- memory-aware admission: footprint caps the pack up front ----
+    bytes_per_lane = 0
+    admission_capped = False
+    if admission is not None:
+        if single_profile is None:      # auto_nppn already probed k=1
+            compiled = jax.jit(make_packed(1)).lower(*example_args(1)).compile()
+            bytes_per_lane = packing.memory_per_lane(compiled)
+        else:
+            bytes_per_lane = single_profile.resident_bytes
+        try:
+            cap = admission.require_fits(bytes_per_lane)
+        except MemoryError as e:
+            raise MemoryError(f"tenant {tenant!r}: {e}") from None
+        if pack > cap:
+            pack, admission_capped = cap, True
 
     # ---- run waves of `pack` lanes ----
     t0 = time.perf_counter()
@@ -88,6 +118,10 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
         wave = queue[:pack]
         queue = queue[pack:]
         k = len(wave)
+        t_wave = time.perf_counter()
+        if gauges is not None:
+            gauges.on_dispatch(tenant, nodes=1, lanes=k,
+                               resident_bytes=bytes_per_lane * k)
         keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in wave])
         params = packing.pack_init(model.init, keys)
         opt_state = jax.vmap(opt.init)(params)
@@ -126,6 +160,12 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
         if ckpt is not None and params is not None:
             ckpt.save((params, opt_state), steps)
             ckpt.wait()
+        if gauges is not None:
+            gauges.on_release(tenant, nodes=1,
+                              node_time=time.perf_counter() - t_wave,
+                              lanes=k, resident_bytes=bytes_per_lane * k)
 
     return SweepResult(losses=losses, wall_s=time.perf_counter() - t0,
-                       pack_factor=pack, backoffs=backoffs)
+                       pack_factor=pack, backoffs=backoffs,
+                       bytes_per_lane=bytes_per_lane,
+                       admission_capped=admission_capped)

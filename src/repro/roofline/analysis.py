@@ -255,6 +255,8 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
     from repro.roofline.hlo_costs import analyze_hlo
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax <= 0.4.x wraps the dict
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
     hc = analyze_hlo(txt)

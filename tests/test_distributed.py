@@ -9,6 +9,8 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
+
+import repro.compat  # noqa: F401  (jax version shims)
 import numpy as np
 import pytest
 
@@ -23,7 +25,8 @@ def _run_sub(code: str, devices: int = 8) -> str:
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC
     env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    code = "import repro.compat  # jax version shims\n" + textwrap.dedent(code)
+    out = subprocess.run([sys.executable, "-c", code],
                          capture_output=True, text=True, env=env, timeout=900)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     return out.stdout

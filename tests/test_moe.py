@@ -1,6 +1,8 @@
 """MoE routing/dispatch invariants + EP equivalence."""
 import jax
 import jax.numpy as jnp
+
+import repro.compat  # noqa: F401  (jax version shims)
 import numpy as np
 import pytest
 

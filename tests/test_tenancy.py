@@ -1,0 +1,258 @@
+"""Multi-tenant scheduling: fair share, backfill, admission, isolation."""
+import pytest
+
+from repro.core import simulate as S
+from repro.core import tenancy as ten
+from repro.core import triples as T
+from repro.core.monitor import TenantGauges
+from repro.core.scheduler import ClusterState, Task, Tenancy, TriplesScheduler
+
+
+# ---------------------------------------------------------------------------
+# fair-share ordering
+# ---------------------------------------------------------------------------
+
+def test_fair_share_prefers_light_user():
+    """A later-submitted job of a lightly-used tenant passes an earlier job
+    of a heavy tenant (usage/share ordering), FIFO breaks ties."""
+    acct = ten.FairShareAccountant()
+    acct.charge("heavy", 1000.0)
+    q = ten.JobQueue(acct)
+    q.push(ten.PendingJob(id=0, user="heavy", n_nodes=1,
+                          submit_seq=q.next_seq()))
+    q.push(ten.PendingJob(id=1, user="light", n_nodes=1,
+                          submit_seq=q.next_seq()))
+    assert [j.id for j in q.ordered()] == [1, 0]
+
+
+def test_fair_share_weighted_shares():
+    """Equal usage: the tenant with the bigger share weight goes first."""
+    acct = ten.FairShareAccountant({"a": ten.TenantQuota(share=1.0),
+                                    "b": ten.TenantQuota(share=4.0)})
+    acct.charge("a", 100.0)
+    acct.charge("b", 100.0)
+    q = ten.JobQueue(acct)
+    q.push(ten.PendingJob(id=0, user="a", n_nodes=1, submit_seq=q.next_seq()))
+    q.push(ten.PendingJob(id=1, user="b", n_nodes=1, submit_seq=q.next_seq()))
+    assert [j.id for j in q.ordered()] == [1, 0]
+
+
+def test_fair_share_decay_forgives_old_usage():
+    acct = ten.FairShareAccountant(half_life=10.0)
+    acct.charge("u", 64.0)
+    acct.decay_to(30.0)                 # three half-lives
+    assert acct.usage("u") == pytest.approx(8.0)
+
+
+def test_dispatch_charges_usage_and_reorders():
+    """After user A's job runs, user B's next job beats A's next job."""
+    cl = ClusterState(2)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create())
+    s.run_triples_job("a", [Task(id=i, fn=lambda ctx: 1) for i in range(8)],
+                      T.Triples(2, 2, 1))
+    assert s.tenancy.accountant.usage("a") > 0
+    ja = s.submit("a", [Task(id=i, fn=lambda ctx: "a") for i in range(4)],
+                  T.Triples(2, 2, 1))
+    jb = s.submit("b", [Task(id=i, fn=lambda ctx: "b") for i in range(4)],
+                  T.Triples(2, 2, 1))
+    assert [j.id for j in s.tenancy.queue.ordered()] == [jb.id, ja.id]
+    done = s.run_queued()
+    assert not done[ja.id].failed and not done[jb.id].failed
+
+
+# ---------------------------------------------------------------------------
+# EASY backfill
+# ---------------------------------------------------------------------------
+
+def test_shadow_analysis():
+    # 1 free, head needs 3, running: 2 nodes free at t=10, 1 at t=20
+    shadow, spare = ten.shadow_analysis(1, 3, [(2, 10.0), (1, 20.0)])
+    assert shadow == 10.0 and spare == 0
+    # head fits now: shadow 0, spare = leftovers
+    shadow, spare = ten.shadow_analysis(5, 3, [])
+    assert shadow == 0.0 and spare == 2
+
+
+def test_backfill_admits_short_job_behind_reservation():
+    q = ten.JobQueue()
+    q.push(ten.PendingJob(id=0, user="big", n_nodes=4,
+                          submit_seq=q.next_seq(), est_duration=100.0))
+    q.push(ten.PendingJob(id=1, user="small", n_nodes=2,
+                          submit_seq=q.next_seq(), est_duration=5.0))
+    # 2 free nodes; a running job returns the other 2 at t=10 (head's shadow)
+    got = q.pop_dispatchable(2, [(2, 10.0)])
+    assert [j.id for j in got] == [1]   # short job backfills, head waits
+    assert len(q) == 1
+
+
+def test_backfill_rejects_job_that_would_delay_gang():
+    q = ten.JobQueue()
+    q.push(ten.PendingJob(id=0, user="big", n_nodes=4,
+                          submit_seq=q.next_seq(), est_duration=100.0))
+    q.push(ten.PendingJob(id=1, user="small", n_nodes=2,
+                          submit_seq=q.next_seq(), est_duration=50.0))
+    # candidate outlives the shadow time (10) and no spare nodes -> blocked
+    got = q.pop_dispatchable(2, [(2, 10.0)])
+    assert got == []
+    assert len(q) == 2
+
+
+def test_backfill_never_starves_waiting_gang():
+    """The big gang's simulated start time with backfill enabled is no
+    later than with backfill disabled, despite a stream of small jobs."""
+    jobs = [S.SimJob(id=0, user="big", submit_t=1.0, kind="train",
+                     n_tasks=4, task_s=50.0, trip=T.Triples(4, 1, 4))]
+    jobs += [S.SimJob(id=1 + i, user="small", submit_t=0.0 + i, kind="sweep",
+                      n_tasks=8, task_s=2.0, trip=T.Triples(1, 8, 1))
+             for i in range(20)]
+    # an initial job holds every node so the gang must queue
+    jobs.append(S.SimJob(id=99, user="warm", submit_t=0.0, kind="train",
+                         n_tasks=4, task_s=30.0, trip=T.Triples(4, 1, 4)))
+
+    def gang_start(backfill):
+        rep = S.simulate(jobs, 4, mode="shared", backfill=backfill)
+        return next(st.start_t for st in rep.stats if st.job.id == 0)
+
+    assert gang_start(True) <= gang_start(False)
+
+
+# ---------------------------------------------------------------------------
+# memory-aware admission
+# ---------------------------------------------------------------------------
+
+def test_admission_caps_pack_factor():
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    adm = ten.MemoryAdmission(spec, headroom=0.9)
+    assert adm.max_pack(4e9) == 3       # 14.4 GB budget / 4 GB per lane
+    ok = adm.admit(T.Triples(1, 8, 1), 4e9)      # pack 2: fits
+    assert ok.admitted and ok.pack_factor == 2
+    bad = adm.admit(T.Triples(1, 16, 1), 4e9)    # pack 4 > cap 3: rejected
+    assert not bad.admitted and bad.max_pack == 3
+
+
+def test_admission_rejects_oversized_single_lane():
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    adm = ten.MemoryAdmission(spec, headroom=0.9)
+    d = adm.admit(T.Triples(1, 4, 1), 20e9)
+    assert not d.admitted and d.max_pack == 0
+    with pytest.raises(MemoryError):
+        adm.clamp(T.Triples(1, 4, 1), 20e9)
+
+
+def test_admission_clamp_shrinks_nppn():
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    adm = ten.MemoryAdmission(spec, headroom=0.9)
+    clamped = adm.clamp(T.Triples(2, 16, 1), 4e9)   # cap 3 lanes/chip
+    assert clamped.pack_factor(spec) <= 3
+    assert clamped.nnode == 2
+    # an already-admissible request is untouched
+    assert adm.clamp(T.Triples(2, 4, 1), 4e9) == T.Triples(2, 4, 1)
+
+
+def test_scheduler_rejects_over_footprint_pack_before_dispatch():
+    """The 21/48-OOM failure mode becomes an up-front rejection: the job
+    never holds a node and no task ever runs."""
+    cl = ClusterState(2)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create(node_spec=cl.node_spec))
+    ran = []
+    job = s.submit("u", [Task(id=0, fn=lambda ctx: ran.append(1))],
+                   T.Triples(1, 16, 1), bytes_per_lane=8e9)
+    assert job.state == "rejected" and "exceeds" in job.reject_reason
+    assert s.run_queued() == {}
+    assert not ran
+    assert cl.free_count() == 2
+    with pytest.raises(MemoryError):
+        s.run_triples_job("u", [Task(id=0, fn=lambda ctx: 1)],
+                          T.Triples(1, 16, 1), bytes_per_lane=8e9)
+
+
+# ---------------------------------------------------------------------------
+# concurrent multi-tenant execution
+# ---------------------------------------------------------------------------
+
+def test_two_user_concurrent_jobs_disjoint_and_isolated():
+    cl = ClusterState(4)
+    gauges = TenantGauges()
+    s = TriplesScheduler(cl, tenancy=Tenancy.create(gauges=gauges))
+    nodes_seen = {"alice": set(), "bob": set()}
+
+    def fn(user):
+        def task(ctx):
+            nodes_seen[user].add(ctx.node)
+            return (user, ctx.task_id)
+        return task
+
+    ja = s.submit("alice", [Task(id=i, fn=fn("alice")) for i in range(10)],
+                  T.Triples(2, 2, 1))
+    jb = s.submit("bob", [Task(id=i, fn=fn("bob")) for i in range(10)],
+                  T.Triples(2, 2, 1))
+    done = s.run_queued()
+    assert set(done) == {ja.id, jb.id}
+    # isolation: each job sees only its own results, on disjoint nodes
+    assert all(v == ("alice", k) for k, v in done[ja.id].results.items())
+    assert all(v == ("bob", k) for k, v in done[jb.id].results.items())
+    assert not (nodes_seen["alice"] & nodes_seen["bob"])
+    assert all(v is None for v in cl.owner.values())
+    assert gauges.gauge("alice").jobs_done == 1
+    assert gauges.gauge("bob").jobs_done == 1
+
+
+def test_queue_serializes_when_cluster_too_small():
+    """Both jobs need the whole cluster: they run one after the other and
+    the second one's wait is recorded."""
+    cl = ClusterState(2)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create())
+    ja = s.submit("a", [Task(id=i, fn=lambda ctx: 1) for i in range(6)],
+                  T.Triples(2, 1, 1))
+    jb = s.submit("b", [Task(id=i, fn=lambda ctx: 1) for i in range(6)],
+                  T.Triples(2, 1, 1))
+    done = s.run_queued()
+    assert not done[ja.id].failed and not done[jb.id].failed
+    waits = sorted(r.wait_rounds for r in done.values())
+    assert waits[0] == 0 and waits[1] > 0
+
+
+def test_max_nodes_quota_enforced():
+    cl = ClusterState(4)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create(
+        quotas={"capped": ten.TenantQuota(max_nodes=1)}))
+    s.submit("capped", [Task(id=0, fn=lambda ctx: 1)], T.Triples(2, 1, 1))
+    done = s.run_queued()
+    assert done == {}                   # over quota: never dispatched
+    ok = s.submit("capped", [Task(id=0, fn=lambda ctx: 1)], T.Triples(1, 1, 1))
+    assert ok.id in s.run_queued()
+
+
+# ---------------------------------------------------------------------------
+# simulation: the paper's sharing claim under contention
+# ---------------------------------------------------------------------------
+
+def test_shared_beats_exclusive_on_mixed_workload():
+    jobs = S.mixed_workload(n_sweep_jobs=10, sweep_tasks=96,
+                            inter_arrival_s=8.0, n_train_jobs=2,
+                            train_nodes=3, n_serve_jobs=6)
+    reps = S.compare_modes(jobs, 4)
+    ex, sh = reps["exclusive"], reps["shared"]
+    assert sh.effective_util > ex.effective_util
+    assert sh.makespan < ex.makespan
+    assert sh.mean_wait() < ex.mean_wait()
+    assert not sh.rejected and not ex.rejected
+
+
+def test_simulation_is_deterministic():
+    jobs = S.mixed_workload()
+    a = S.simulate(jobs, 8, mode="shared")
+    b = S.simulate(jobs, 8, mode="shared")
+    assert [(s.job.id, s.start_t, s.end_t) for s in a.stats] == \
+           [(s.job.id, s.start_t, s.end_t) for s in b.stats]
+
+
+def test_simulation_admission_clamps_pack():
+    """A sweep whose lanes would overflow HBM runs at the clamped pack."""
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    job = S.SimJob(id=0, user="u", submit_t=0.0, kind="sweep", n_tasks=32,
+                   task_s=1.0, trip=T.Triples(1, 16, 1), bytes_per_lane=6e9)
+    rep = S.simulate([job], 2, spec, mode="shared",
+                     admission=ten.MemoryAdmission(spec))
+    (st,) = rep.stats
+    assert st.pack_factor == 2          # 14.4 GB / 6 GB = 2 lanes per chip
