@@ -25,23 +25,32 @@ N_NODES = 4
 
 
 def contended_workload():
-    """Mixed mix sized so the 4-node cluster is genuinely contended."""
-    return S.mixed_workload(n_sweep_jobs=10, sweep_tasks=96,
+    """Mixed mix sized so the 4-node cluster is genuinely contended.
+    Sweeps are RAGGED (88 tasks over 16 slots leave 8 free tail lanes)
+    and alice adds short eval bursts — the shape lane-level refill
+    (DESIGN.md §7) exists for."""
+    return S.mixed_workload(n_sweep_jobs=10, sweep_tasks=88,
                             inter_arrival_s=8.0, n_train_jobs=2,
-                            train_nodes=3, n_serve_jobs=6)
+                            train_nodes=3, n_serve_jobs=6, n_eval_jobs=8)
 
 
 def run():
-    # ---- simulated replay: exclusive vs shared -------------------------
+    # ---- simulated replay: exclusive vs shared vs shared+refill --------
     jobs = contended_workload()
-    reports = S.compare_modes(jobs, N_NODES)
+    reports = S.compare_modes(jobs, N_NODES, lane_refill=True)
     print(S.comparison_table(reports))
     ex, sh = reports["exclusive"], reports["shared"]
+    lr = reports["shared+refill"]
     assert sh.effective_util > ex.effective_util, (
         "sharing must beat exclusive on effective utilization "
         f"({sh.effective_util:.1%} vs {ex.effective_util:.1%})")
     assert sh.makespan < ex.makespan
     assert sh.mean_wait() < ex.mean_wait()
+    assert lr.lane_backfills > 0, "lane refill must fire on ragged sweeps"
+    assert lr.mean_wait() < sh.mean_wait(), (
+        "lane refill must cut queue waits "
+        f"({lr.mean_wait():.1f}s vs {sh.mean_wait():.1f}s)")
+    assert lr.makespan <= sh.makespan + 1e-9   # no-extension guarantee
 
     emit("multitenant.exclusive_eff_util", ex.effective_util * 100,
          f"makespan={ex.makespan:.0f}s wait={ex.mean_wait():.0f}s")
@@ -49,6 +58,9 @@ def run():
          f"makespan={sh.makespan:.0f}s wait={sh.mean_wait():.0f}s")
     emit("multitenant.sharing_speedup", ex.makespan / sh.makespan,
          f"{ex.makespan / sh.makespan:.2f}x less wall-clock")
+    emit("multitenant.lane_refill_backfills", lr.lane_backfills,
+         f"wait={lr.mean_wait():.0f}s vs {sh.mean_wait():.0f}s shared; "
+         f"zero extra nodes")
 
     # ---- live path: two tenants' gangs concurrent on disjoint nodes ----
     gauges = TenantGauges()

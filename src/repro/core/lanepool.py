@@ -1,0 +1,313 @@
+"""Persistent lane-pool executor: compile once, refill lanes forever.
+
+The wave-based execution path (run K lanes in lockstep, wait for the whole
+wave) leaves a slot idle from the moment its task finishes until the wave
+ends — exactly the utilization gap the paper's triples mode closes at the
+node level. This module closes it at the LANE level:
+
+  * ``LanePool`` — a fixed-capacity stacked-pytree pool with an active-lane
+    mask. The masked step (packing.packed_masked_step) is compiled ONCE
+    over the pool capacity; tasks attach/detach mid-flight via per-lane
+    pytree index updates (packing.tree_set_lane / tree_get_lane), which
+    never change shapes and therefore never retrace. ``n_traces`` counts
+    actual jit traces so tests can assert the compile-once guarantee.
+
+  * ``RefillExecutor`` — continuous refill over a task queue: the moment a
+    lane's task exhausts its per-task step budget (or early-stops), the
+    lane is detached and the next queued task attaches in the SAME pool,
+    between two masked steps. Makespan on a skewed-duration workload is
+    max over lanes of the work that lane happened to carry, not
+    waves × max(task length) (benchmarks/bench_lane_refill.py).
+
+Semantics guarantee (tested): a task that detaches and re-attaches on
+another lane produces bit-identical losses to an uninterrupted run —
+masked inactive lanes pass their state through untouched, and lanes are
+independent under vmap, so co-residents cannot perturb each other.
+
+This pool is the seam sweep (launch/sweep.py), serve (launch/serve.py)
+and the scheduler's lane-level backfill (core/scheduler.py) execute on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+
+class PoolStepError(RuntimeError):
+    """The compiled masked step failed — a POOL-WIDE event (a packed
+    program's OOM kills all lanes at once). Raised chained to the original
+    exception so callers can distinguish a pool failure (back off, rebuild
+    smaller) from a bug in their own callbacks (which propagates raw)."""
+
+
+@dataclasses.dataclass
+class LaneTask:
+    """One unit of work that occupies a lane for ``steps`` masked steps.
+
+    ``init_fn`` builds the lane state at attach time (or restores it from a
+    checkpoint); ``batch_fn(step_done)`` yields the task's next batch.
+    """
+    id: int
+    hparams: Any                        # per-lane scalars (e.g. lr)
+    init_fn: Callable[[], Tuple[Any, Any]]       # () -> (params, opt_state)
+    batch_fn: Callable[[int], Any]               # step_done -> batch pytree
+    steps: int                                    # per-task step budget
+    step_done: int = 0
+    stopped_early: bool = False
+
+
+class LanePool:
+    """Fixed-capacity stacked lane state with an active mask.
+
+    The compiled program is a function of the pool CAPACITY only — not of
+    which lanes are live — so a pool outlives every task that passes
+    through it with exactly one trace.
+    """
+
+    def __init__(self, capacity: int, step_fn: Callable, *,
+                 template_params: Any, template_opt: Any,
+                 template_hparams: Any, donate: bool = True):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.params = packing.stack_trees([template_params] * capacity)
+        self.opt_state = packing.stack_trees([template_opt] * capacity)
+        self.hparams = packing.stack_trees([template_hparams] * capacity)
+        self.active = np.zeros((capacity,), bool)
+        self.owner: List[Optional[int]] = [None] * capacity   # task id
+        self._n_traces = 0
+
+        def counted(params, opt_state, batch, hparams):
+            self._n_traces += 1         # runs at TRACE time only
+            return step_fn(params, opt_state, batch, hparams)
+
+        self._step = packing.packed_masked_step(counted, donate=donate)
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def n_traces(self) -> int:
+        return self._n_traces
+
+    def free_lanes(self) -> List[int]:
+        return [i for i in range(self.capacity) if not self.active[i]]
+
+    def active_lanes(self) -> List[int]:
+        return [i for i in range(self.capacity) if self.active[i]]
+
+    def attach(self, lane: int, task_id: int, params: Any, opt_state: Any,
+               hparams: Any):
+        """Swap a task's state into a free lane (pure index updates)."""
+        if self.active[lane]:
+            raise RuntimeError(
+                f"lane {lane} already occupied by task {self.owner[lane]}")
+        self.params = packing.tree_set_lane(self.params, lane, params)
+        self.opt_state = packing.tree_set_lane(self.opt_state, lane, opt_state)
+        self.hparams = packing.tree_set_lane(self.hparams, lane, hparams)
+        self.active[lane] = True
+        self.owner[lane] = task_id
+
+    def detach(self, lane: int) -> Tuple[Any, Any]:
+        """Free a lane, returning its (params, opt_state)."""
+        if not self.active[lane]:
+            raise RuntimeError(f"lane {lane} is not occupied")
+        state = (packing.tree_get_lane(self.params, lane),
+                 packing.tree_get_lane(self.opt_state, lane))
+        self.active[lane] = False
+        self.owner[lane] = None
+        return state
+
+    # ------------------------------------------------------------------ step
+    def step(self, batch: Any) -> Any:
+        """One masked step over the whole pool. ``batch`` carries the lane
+        axis at capacity; inactive lanes' entries may be any benign values
+        (their state passes through and their metrics are discarded).
+        Raises PoolStepError (chaining the original) if the compiled step
+        itself fails — an event that concerns every lane at once."""
+        mask = jnp.asarray(self.active)
+        try:
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch, self.hparams, mask)
+        except Exception as e:
+            raise PoolStepError(f"masked pool step failed: {e}") from e
+        return metrics
+
+
+@dataclasses.dataclass
+class RefillStats:
+    """What continuous refill did — the benchmark's raw material."""
+    global_steps: int = 0               # pool.step() invocations
+    lane_steps: int = 0                 # active lane-steps (useful work)
+    attaches: int = 0
+    n_traces: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of lanes doing useful work per global step."""
+        if not self.global_steps:
+            return 0.0
+        return self.lane_steps / self.global_steps
+
+
+class RefillExecutor:
+    """Continuous refill: lanes never wait for a wave boundary.
+
+    Each iteration: (1) attach queued tasks to every free lane, (2) one
+    masked pool step, (3) retire lanes whose task hit its budget or
+    early-stopped. ``on_metrics(task, step_index, lane_metrics) -> bool``
+    observes per-step metrics and may request early stop by returning
+    True; ``on_finish(task, params, opt_state)`` receives the final lane
+    state (checkpointing, result collection).
+
+    With ``checkpoint_every`` set, ``on_checkpoint(task, params,
+    opt_state)`` additionally receives a mid-flight copy of the lane state
+    every N task-steps (read in place — the lane keeps running).
+
+    With ``record_history`` (off by default — it grows with steps ×
+    capacity), ``history`` records every (global_step, lane, task_id)
+    occupancy so tests can verify no lane ever hosts two tasks at once.
+    """
+
+    def __init__(self, pool: LanePool, *,
+                 on_metrics: Optional[Callable[[LaneTask, int, Any], bool]] = None,
+                 on_finish: Optional[Callable[[LaneTask, Any, Any], None]] = None,
+                 on_step_start: Optional[Callable[[], None]] = None,
+                 on_step: Optional[Callable[[int, int, int], None]] = None,
+                 checkpoint_every: int = 0,
+                 on_checkpoint: Optional[Callable[[LaneTask, Any, Any],
+                                                  None]] = None,
+                 record_history: bool = False):
+        self.pool = pool
+        self.on_metrics = on_metrics
+        self.on_finish = on_finish
+        self.on_step_start = on_step_start      # brackets pool.step for
+        self.on_step = on_step          # timing: (global, active, capacity)
+        self.checkpoint_every = checkpoint_every
+        self.on_checkpoint = on_checkpoint
+        self.record_history = record_history
+        self.history: List[Tuple[int, int, int]] = []
+        self._zero_batch: Any = None
+
+    def _refill(self, queue: deque, lane_task: List[Optional[LaneTask]],
+                stats: RefillStats):
+        for lane in self.pool.free_lanes():
+            attached = False
+            while queue and not attached:
+                t = queue.popleft()
+                params, opt_state = t.init_fn()
+                if t.step_done >= t.steps:      # zero budget / fully
+                    if self.on_finish is not None:   # checkpoint-restored
+                        self.on_finish(t, params, opt_state)
+                    continue
+                self.pool.attach(lane, t.id, params, opt_state, t.hparams)
+                lane_task[lane] = t
+                stats.attaches += 1
+                attached = True
+            if not queue and not attached:
+                break
+
+    def _stacked_batch(self, lane_task: List[Optional[LaneTask]]) -> Any:
+        live = {i: jax.tree_util.tree_map(jnp.asarray,
+                                          t.batch_fn(t.step_done))
+                for i, t in enumerate(lane_task) if t is not None}
+        if self._zero_batch is None:
+            template = next(iter(live.values()))
+            self._zero_batch = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, x.dtype), template)
+        return packing.stack_trees([live.get(i, self._zero_batch)
+                                    for i in range(len(lane_task))])
+
+    def run(self, tasks: Sequence[LaneTask]) -> RefillStats:
+        queue = deque(tasks)
+        pool = self.pool
+        lane_task: List[Optional[LaneTask]] = [None] * pool.capacity
+        stats = RefillStats()
+        while queue or any(t is not None for t in lane_task):
+            self._refill(queue, lane_task, stats)
+            if self._zero_batch is None and all(
+                    t is None for t in lane_task):
+                break                   # nothing attachable (empty task set)
+            if self.record_history:
+                for lane, t in enumerate(lane_task):
+                    if t is not None:
+                        self.history.append((stats.global_steps, lane, t.id))
+            batch = self._stacked_batch(lane_task)
+            if self.on_step_start is not None:
+                self.on_step_start()
+            metrics = pool.step(batch)
+            n_active = sum(1 for t in lane_task if t is not None)
+            stats.lane_steps += n_active
+            if self.on_step is not None:
+                self.on_step(stats.global_steps, n_active, pool.capacity)
+            stats.global_steps += 1
+            for lane, t in enumerate(lane_task):
+                if t is None:
+                    continue
+                stop = False
+                if self.on_metrics is not None:
+                    lm = packing.lane_slice(metrics, lane)
+                    stop = bool(self.on_metrics(t, t.step_done, lm))
+                t.step_done += 1
+                if stop:
+                    t.stopped_early = True
+                if t.step_done >= t.steps or stop:
+                    params, opt_state = pool.detach(lane)
+                    lane_task[lane] = None
+                    if self.on_finish is not None:
+                        self.on_finish(t, params, opt_state)
+                elif (self.checkpoint_every
+                      and self.on_checkpoint is not None
+                      and t.step_done % self.checkpoint_every == 0):
+                    self.on_checkpoint(
+                        t, packing.tree_get_lane(pool.params, lane),
+                        packing.tree_get_lane(pool.opt_state, lane))
+        stats.n_traces = pool.n_traces
+        return stats
+
+
+def run_waves(pool_factory: Callable[[], LanePool],
+              tasks: Sequence[LaneTask],
+              on_metrics: Optional[Callable[[LaneTask, int, Any], bool]] = None,
+              on_finish: Optional[Callable[[LaneTask, Any, Any], None]] = None,
+              ) -> RefillStats:
+    """Wave-scheduling BASELINE (the pre-lane-pool semantics), kept for the
+    refill benchmark: pack capacity-many tasks, run until the LAST one in
+    the wave finishes, only then admit the next wave. Uses the same masked
+    pool so the comparison isolates scheduling, not compilation."""
+    pool = pool_factory()
+    queue = deque(tasks)
+    stats = RefillStats()
+    ex = RefillExecutor(pool, on_metrics=on_metrics, on_finish=on_finish)
+    while queue:
+        wave = [queue.popleft() for _ in range(min(pool.capacity, len(queue)))]
+        lane_task: List[Optional[LaneTask]] = [None] * pool.capacity
+        ex._refill(deque(wave), lane_task, stats)
+        done: List[Optional[LaneTask]] = list(lane_task)
+        while any(t is not None for t in done):
+            batch = ex._stacked_batch(done)
+            metrics = pool.step(batch)
+            stats.lane_steps += sum(1 for t in done if t is not None)
+            stats.global_steps += 1
+            for lane, t in enumerate(done):
+                if t is None:
+                    continue
+                stop = False
+                if on_metrics is not None:
+                    stop = bool(on_metrics(
+                        t, t.step_done, packing.lane_slice(metrics, lane)))
+                t.step_done += 1
+                if stop:
+                    t.stopped_early = True
+                if t.step_done >= t.steps or stop:
+                    params, opt_state = pool.detach(lane)
+                    done[lane] = None   # lane idles until the wave drains
+                    if on_finish is not None:
+                        on_finish(t, params, opt_state)
+    stats.n_traces = pool.n_traces
+    return stats

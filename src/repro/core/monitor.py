@@ -144,6 +144,24 @@ class TenantGauge:
     waits: List[float] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class GangLaneGauge:
+    """Per-GANG lane-occupancy gauge (one gang = one lane pool).
+
+    Occupancy samples are decayed PER GANG, not per node or per tenant:
+    under continuous refill, lanes of different gangs churn at different
+    rates, and a shared EWMA would smear a draining gang's falling
+    occupancy over a full one. ``occupancy`` is an EWMA of
+    active/capacity; ``last`` the raw latest sample."""
+    user: str
+    gang: str
+    capacity: int = 0
+    active: int = 0
+    occupancy: float = 0.0              # decayed (EWMA) fraction
+    last: float = 0.0                   # latest raw fraction
+    samples: int = 0
+
+
 class TenantGauges:
     """Per-tenant resource gauges the scheduler updates at dispatch/release.
 
@@ -152,13 +170,57 @@ class TenantGauges:
     which nodes, how many packed lanes, how much HBM, and the fair-share
     usage each tenant has accumulated."""
 
-    def __init__(self):
+    def __init__(self, occupancy_decay: float = 0.7):
+        if not 0 < occupancy_decay < 1:
+            raise ValueError(
+                f"occupancy_decay must be in (0, 1), got {occupancy_decay}")
         self._g: Dict[str, TenantGauge] = {}
+        self._gangs: Dict[str, GangLaneGauge] = {}
+        self.occupancy_decay = occupancy_decay
 
     def gauge(self, user: str) -> TenantGauge:
         if user not in self._g:
             self._g[user] = TenantGauge(user=user)
         return self._g[user]
+
+    # ---------------------------------------------- per-gang lane occupancy
+    def gang_gauge(self, gang: str, user: str = "") -> GangLaneGauge:
+        if gang not in self._gangs:
+            self._gangs[gang] = GangLaneGauge(user=user, gang=gang)
+        return self._gangs[gang]
+
+    def on_lane_sample(self, user: str, gang: str, active: int,
+                       capacity: int):
+        """One lane-occupancy sample for ``gang``'s pool: EWMA-decayed per
+        gang so refill churn on one gang cannot destabilize another's
+        reading."""
+        g = self.gang_gauge(gang, user)
+        g.user = g.user or user
+        g.capacity = capacity
+        g.active = active
+        frac = active / capacity if capacity else 0.0
+        g.last = frac
+        if g.samples == 0:
+            g.occupancy = frac
+        else:
+            d = self.occupancy_decay
+            g.occupancy = d * g.occupancy + (1 - d) * frac
+        g.samples += 1
+
+    def on_gang_done(self, gang: str):
+        """Retire a finished gang's occupancy gauge."""
+        self._gangs.pop(gang, None)
+
+    def gang_table(self) -> str:
+        """Render the per-gang lane-occupancy snapshot."""
+        lines = [f"{'GANG':20s} {'TENANT':12s} {'LANES':>5s} "
+                 f"{'ACTIVE':>6s} {'OCC(EWMA)':>9s} {'OCC(LAST)':>9s}"]
+        for gang in sorted(self._gangs):
+            g = self._gangs[gang]
+            lines.append(f"{gang:20s} {g.user:12s} {g.capacity:>5d} "
+                         f"{g.active:>6d} {g.occupancy:>8.1%} "
+                         f"{g.last:>8.1%}")
+        return "\n".join(lines)
 
     def on_dispatch(self, user: str, nodes: int, lanes: int = 0,
                     resident_bytes: int = 0, wait: float = 0.0):

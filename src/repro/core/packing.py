@@ -35,9 +35,60 @@ def lane_slice(tree: Any, i: int) -> Any:
     return jax.tree_util.tree_map(lambda x: x[i], tree)
 
 
+# Aliases named for the lane-pool executor (core/lanepool.py): a lane swap
+# is a pytree index read/write on the stacked leading axis — no reshape, no
+# re-stack, so the pool's shapes (and its compiled step) never change.
+def tree_get_lane(tree: Any, i: int) -> Any:
+    """Read lane ``i`` of a stacked pytree."""
+    return lane_slice(tree, i)
+
+
+def tree_set_lane(tree: Any, i: int, lane: Any) -> Any:
+    """Write ``lane`` into slot ``i`` of a stacked pytree (functional)."""
+    return jax.tree_util.tree_map(
+        lambda pool, x: pool.at[i].set(jnp.asarray(x, pool.dtype)),
+        tree, lane)
+
+
 def pack_init(init_fn: Callable, keys: jax.Array) -> Any:
     """vmap an init function over per-lane PRNG keys -> stacked params."""
     return jax.vmap(init_fn)(keys)
+
+
+def masked_step(step_fn: Callable) -> Callable:
+    """Per-lane step gated by a scalar ``active`` flag.
+
+    Returns ``fn(params, opt_state, batch, hparams, active) -> (params,
+    opt_state, metrics)``. An inactive lane's state passes through
+    bit-identically (``jnp.where`` keeps the old buffers); an active lane's
+    result is exactly ``step_fn``'s — lanes are independent under vmap, so
+    the values on other lanes (garbage, zeros, NaN) cannot leak in. This is
+    the primitive the lane pool (core/lanepool.py) compiles ONCE over its
+    capacity: attach/detach only flips the mask and swaps lane state, so
+    the traced computation never changes.
+    """
+    def step(params, opt_state, batch, hparams, active):
+        new_p, new_o, metrics = step_fn(params, opt_state, batch, hparams)
+        keep = lambda new, old: jnp.where(active, new, old)
+        return (jax.tree_util.tree_map(keep, new_p, params),
+                jax.tree_util.tree_map(keep, new_o, opt_state),
+                metrics)
+    return step
+
+
+def packed_masked_step(step_fn: Callable, *, donate: bool = True) -> Callable:
+    """vmap + jit the masked step over the lane axis: the lane pool's
+    compiled program. Signature of the result:
+
+        (params, opt_state, batch, hparams, active_mask) ->
+            (params, opt_state, metrics)
+
+    where every arg carries the leading lane axis and ``active_mask`` is a
+    bool vector of pool capacity. Inactive lanes' metrics are garbage —
+    callers filter by the mask.
+    """
+    v = jax.vmap(masked_step(step_fn))
+    return jax.jit(v, donate_argnums=(0, 1) if donate else ())
 
 
 def packed_step(step_fn: Callable, *, donate: bool = True,
@@ -46,6 +97,11 @@ def packed_step(step_fn: Callable, *, donate: bool = True,
 
     step_fn(params, opt_state, batch, hparams) -> (params, opt_state, metrics)
     (any pytree signature works; all args must carry the lane axis).
+
+    This is the LOCKSTEP API: every lane steps every call. It remains the
+    right tool when all lanes genuinely run the same number of steps; the
+    lane pool's masked step (packed_masked_step) generalizes it to lanes
+    that attach/detach mid-flight.
     """
     v = jax.vmap(step_fn)
     return jax.jit(v, donate_argnums=(0, 1) if donate else (),

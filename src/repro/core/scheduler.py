@@ -144,6 +144,13 @@ class _GangRun:
 
     ``step_round`` executes at most one task per slot, so several gangs
     interleave deterministically when stepped in turn by ``run_queued``.
+
+    A gang may carry MORE than one job: lane-level backfill (``adopt``)
+    places an admitted small job of the same user onto the gang's free
+    slots instead of waiting for whole nodes. Tasks are therefore keyed
+    ``(jobk, task_id)`` internally — jobk 0 is the job the gang was
+    allocated for, adopted jobs get fresh jobk values — and results are
+    split back per job on completion.
     """
 
     def __init__(self, sched: "TriplesScheduler", user: str,
@@ -153,24 +160,71 @@ class _GangRun:
         self.trip = trip
         self.nodes = nodes
         self.t_start = time.perf_counter()
-        self.results: Dict[int, Any] = {}
-        self.failed: Dict[int, str] = {}
-        self.by_id = {t.id: t for t in tasks}
+        self.t_starts: Dict[int, float] = {0: self.t_start}
+        self.results: Dict[Tuple[int, int], Any] = {}
+        self.failed: Dict[Tuple[int, int], str] = {}
+        self.by_key: Dict[Tuple[int, int], Task] = {
+            (0, t.id): t for t in tasks}
+        self._next_jobk = 1
+        # jobk -> (pack_factor, bytes_per_lane) of jobs adopted onto this
+        # gang and still running — the admission veto must count them all
+        self.adopted_pack: Dict[int, Tuple[int, float]] = {}
         plan = T.plan(len(tasks), trip, sched.cluster.node_spec,
                       alive_nodes=nodes)
-        self.queues: Dict[T.SlotAssignment, List[int]] = {
-            s: list(s.task_ids) for s in plan.slots}
-        self.pending_retry: List[int] = []
+        ids = [t.id for t in tasks]
+        self.queues: Dict[T.SlotAssignment, List[Tuple[int, int]]] = {
+            s: [(0, ids[i]) for i in s.task_ids] for s in plan.slots}
+        self.pending_retry: List[Tuple[int, int]] = []
 
     @property
     def finished(self) -> bool:
         return not any(self.queues.values()) and not self.pending_retry
+
+    def job_finished(self, jobk: int) -> bool:
+        """True when no task of ``jobk`` is queued or awaiting retry."""
+        if any(k[0] == jobk for k in self.pending_retry):
+            return False
+        return not any(k[0] == jobk for q in self.queues.values() for k in q)
 
     def remaining_rounds(self) -> int:
         """Upper bound on rounds to completion (longest slot queue)."""
         longest = max((len(q) for q in self.queues.values()), default=0)
         return longest + (1 if self.pending_retry else 0)
 
+    # ------------------------------------------------- lane-level backfill
+    def free_slot_count(self) -> int:
+        """Slots on alive nodes whose queues have drained — the lanes a
+        backfilled job may claim."""
+        return sum(1 for s, q in self.queues.items()
+                   if not q and s.node not in self.sched.cluster.down)
+
+    def lane_counts(self) -> Tuple[int, int]:
+        """(busy_slots, total_alive_slots) — the occupancy sample."""
+        alive = [(s, q) for s, q in self.queues.items()
+                 if s.node not in self.sched.cluster.down]
+        busy = sum(1 for _, q in alive if q)
+        return busy, len(alive)
+
+    def adopt(self, tasks: List[Task], lanes: Optional[int] = None) -> int:
+        """Attach another job's tasks round-robin onto (at most ``lanes``
+        of) the free slots. Returns the jobk the tasks are keyed under.
+        ``lanes`` must honour the grant from pop_lane_backfill — several
+        jobs may be granted disjoint lane shares of one gang in a round."""
+        jobk = self._next_jobk
+        self._next_jobk += 1
+        self.t_starts[jobk] = time.perf_counter()
+        free = [s for s, q in self.queues.items()
+                if not q and s.node not in self.sched.cluster.down]
+        if lanes is not None:
+            free = free[:lanes]
+        if not free:
+            raise RuntimeError("lane backfill onto a gang with no free slot")
+        for i, t in enumerate(tasks):
+            self.by_key[(jobk, t.id)] = t
+            self.queues[free[i % len(free)]].append((jobk, t.id))
+        return jobk
+
+    # -------------------------------------------------------------- rounds
     def step_round(self) -> bool:
         """One cooperative round: ≤1 task per slot, then retry handling.
         Returns False when no progress is possible (deadlock guard)."""
@@ -178,15 +232,15 @@ class _GangRun:
         progressed = False
         for slot, q in self.queues.items():
             if slot.node in cluster.down:
-                orphans = [tid for tid in q if tid not in self.results]
+                orphans = [k for k in q if k not in self.results]
                 q.clear()
                 self.pending_retry.extend(orphans)
                 continue
             if not q:
                 continue
-            tid = q.pop(0)
+            key = q.pop(0)
             progressed = True
-            self.sched._run_one(self.by_id[tid], slot, self.trip,
+            self.sched._run_one(key, self.by_key[key], slot, self.trip,
                                 self.results, self.failed, self.pending_retry)
         if self.pending_retry:
             self._replan()
@@ -198,12 +252,12 @@ class _GangRun:
         cluster = self.sched.cluster
         alive = [n for n in self.nodes if n not in cluster.down]
         if not alive:
-            for tid in self.pending_retry:
-                self.failed[tid] = "no alive nodes"
+            for key in self.pending_retry:
+                self.failed[key] = "no alive nodes"
             self.pending_retry.clear()
             for q in self.queues.values():
-                for tid in q:
-                    self.failed[tid] = "no alive nodes"
+                for key in q:
+                    self.failed[key] = "no alive nodes"
             self.queues = {}
             return
         # drain EVERY outstanding queue too — the fresh plan covers
@@ -214,19 +268,33 @@ class _GangRun:
         replanned = T.plan(len(outstanding), self.trip,
                            cluster.node_spec, alive_nodes=alive)
         self.sched._log("replan", tasks=list(outstanding), nodes=alive)
-        remap = {i: tid for i, tid in enumerate(outstanding)}
+        remap = {i: key for i, key in enumerate(outstanding)}
         self.pending_retry = []
         self.queues = {s: [remap[i] for i in s.task_ids]
                        for s in replanned.slots}
 
-    def finish(self, alloc_cycles: int, wait_rounds: int = 0) -> JobResult:
+    # ------------------------------------------------------------- results
+    def job_result(self, jobk: int, alloc_cycles: int,
+                   wait_rounds: int = 0) -> JobResult:
+        """Split this job's share of the gang's results out by task id."""
+        return JobResult(
+            results={k[1]: v for k, v in self.results.items()
+                     if k[0] == jobk},
+            failed={k[1]: v for k, v in self.failed.items() if k[0] == jobk},
+            events=self.sched.events, alloc_cycles=alloc_cycles,
+            wall_s=time.perf_counter() - self.t_starts.get(jobk,
+                                                           self.t_start),
+            wait_rounds=wait_rounds)
+
+    def release(self):
         cluster = self.sched.cluster
         cluster.release([n for n in self.nodes if n not in cluster.down])
         self.sched._log("release", nodes=self.nodes)
-        return JobResult(results=self.results, failed=self.failed,
-                         events=self.sched.events, alloc_cycles=alloc_cycles,
-                         wall_s=time.perf_counter() - self.t_start,
-                         wait_rounds=wait_rounds)
+
+    def finish(self, alloc_cycles: int, wait_rounds: int = 0) -> JobResult:
+        """Single-job path: release the gang and return job 0's result."""
+        self.release()
+        return self.job_result(0, alloc_cycles, wait_rounds)
 
 
 # ---------------------------------------------------------------------------
@@ -341,30 +409,61 @@ class TriplesScheduler:
             id=job.id, user=user, n_nodes=trip.nnode,
             submit_seq=self.tenancy.queue.next_seq(),
             est_duration=float(est), bytes_per_lane=bytes_per_lane,
-            payload=job))
+            n_slots=trip.total_slots, n_tasks=len(tasks), payload=job))
         self._log("submit", job=job.id, user=user, nodes=trip.nnode)
         return job
+
+    def _lane_backfill_admit(self, runs: Dict[int, "_GangRun"],
+                             hosts: Dict[int, GangJob]):
+        """Predicate for JobQueue.pop_lane_backfill: the combined per-chip
+        footprint of host + adopted lanes must fit the admission budget
+        (conservative: both at the larger per-lane footprint)."""
+        adm = self.tenancy.admission if self.tenancy else None
+
+        def admit(pj: ten.PendingJob, run_id: int) -> bool:
+            if adm is None:
+                return True
+            host = hosts[run_id]
+            run = runs[run_id]
+            job: GangJob = pj.payload
+            spec = adm.node_spec
+            co = [(host.trip.pack_factor(spec), float(host.bytes_per_lane)),
+                  *run.adopted_pack.values(),
+                  (job.trip.pack_factor(spec), float(pj.bytes_per_lane))]
+            return adm.admit_colocated([p for p, _ in co],
+                                       [b for _, b in co])
+
+        return admit
 
     def run_queued(self) -> Dict[int, JobResult]:
         """Drain the pending queue, executing admitted gangs CONCURRENTLY.
 
         Each cooperative round: (1) dispatch every job the fair-share +
-        backfill policy allows onto strictly-disjoint fresh nodes, (2) step
-        every active gang one task-round. Completed gangs release nodes and
-        charge node-rounds to their tenant's fair-share usage. Deterministic
-        — no threads, no clocks in the policy path."""
+        backfill policy allows onto strictly-disjoint fresh nodes, (2)
+        lane-backfill queued jobs onto free lanes of gangs their user
+        already runs (zero extra nodes — see JobQueue.pop_lane_backfill),
+        (3) step every active gang one task-round. Completed gangs release
+        nodes and charge node-rounds to their tenant's fair-share usage;
+        a lane-backfilled job charges nothing extra, because its user is
+        already paying for the host gang's nodes. Deterministic — no
+        threads, no clocks in the policy path."""
         tn = self.tenancy
         if tn is None:
             raise RuntimeError("run_queued() requires a Tenancy")
-        active: Dict[int, Tuple[GangJob, _GangRun]] = {}
+        runs: Dict[int, _GangRun] = {}          # run id -> gang runtime
+        hosts: Dict[int, GangJob] = {}          # run id -> job 0
+        placed: Dict[int, Tuple[int, int]] = {} # job id -> (run id, jobk)
+        active_jobs: Dict[int, GangJob] = {}
+        granted_lanes: Dict[int, int] = {}      # job id -> lanes gauged
+        charged_rounds: Dict[int, int] = {}     # run id -> rounds charged
         dispatch_round: Dict[int, int] = {}
         submit_round: Dict[int, int] = {j.id: 0 for j in tn.queue.ordered()}
         done: Dict[int, JobResult] = {}
         rnd = 0
-        while len(tn.queue) or active:
-            # dispatch phase
+        while len(tn.queue) or active_jobs:
+            # dispatch phase: whole-node allocations first
             running_view = [(run.trip.nnode, float(run.remaining_rounds()))
-                            for _, run in active.values()]
+                            for run in runs.values()]
             for pj in tn.queue.pop_dispatchable(
                     self.cluster.free_count(), running_view,
                     held_by_user=self.cluster.held_counts()):
@@ -378,8 +477,11 @@ class TriplesScheduler:
                 self._log("alloc", user=job.user, nodes=nodes, job=job.id,
                           triples=dataclasses.astuple(job.trip))
                 job.state = "running"
-                active[job.id] = (job, _GangRun(self, job.user, job.tasks,
-                                                job.trip, nodes))
+                run = _GangRun(self, job.user, job.tasks, job.trip, nodes)
+                runs[job.id] = run
+                hosts[job.id] = job
+                placed[job.id] = (job.id, 0)
+                active_jobs[job.id] = job
                 dispatch_round[job.id] = rnd
                 if tn.gauges is not None:
                     tn.gauges.on_dispatch(
@@ -388,38 +490,104 @@ class TriplesScheduler:
                         resident_bytes=int(job.bytes_per_lane
                                            * job.trip.total_slots),
                         wait=float(rnd - submit_round.get(job.id, 0)))
-            if not active:
+            # lane-backfill phase: free lanes on same-user gangs
+            lane_view: Dict[str, List[Tuple[int, int, float]]] = {}
+            for rid, run in runs.items():
+                free = run.free_slot_count()
+                if free > 0:
+                    lane_view.setdefault(run.user, []).append(
+                        (rid, free, float(run.remaining_rounds())))
+            if lane_view:
+                for pj, rid, granted in tn.queue.pop_lane_backfill(
+                        lane_view, self._lane_backfill_admit(runs, hosts)):
+                    job = pj.payload
+                    jobk = runs[rid].adopt(job.tasks, lanes=granted)
+                    runs[rid].adopted_pack[jobk] = (
+                        job.trip.pack_factor(self.cluster.node_spec),
+                        float(job.bytes_per_lane))
+                    self._log("lane_backfill", job=job.id, user=job.user,
+                              host=rid, lanes=granted)
+                    job.state = "running"
+                    placed[job.id] = (rid, jobk)
+                    active_jobs[job.id] = job
+                    granted_lanes[job.id] = granted
+                    dispatch_round[job.id] = rnd
+                    if tn.gauges is not None:
+                        tn.gauges.on_dispatch(
+                            job.user, nodes=0, lanes=granted,
+                            resident_bytes=int(job.bytes_per_lane
+                                               * granted),
+                            wait=float(rnd - submit_round.get(job.id, 0)))
+            if not active_jobs:
                 if len(tn.queue):       # nothing dispatchable and nothing
                     self._log("stalled",  # running: cluster cannot serve
                               queued=[j.id for j in tn.queue.ordered()])
                     break
                 continue
             # execution phase: one task-round per active gang
-            for jid in list(active):
-                job, run = active[jid]
+            for run in runs.values():
                 if not run.finished:
                     run.step_round()
-                if run.finished:
-                    wait = dispatch_round[jid] - submit_round.get(jid, 0)
-                    job.result = run.finish(self._alloc_cycles,
+            if tn.gauges is not None:   # per-gang lane-occupancy samples
+                for rid, run in runs.items():
+                    busy, total = run.lane_counts()
+                    tn.gauges.on_lane_sample(run.user, f"gang:{rid}",
+                                             busy, total)
+            # completion phase: jobs first, then their gangs
+            for jid in list(active_jobs):
+                job = active_jobs[jid]
+                rid, jobk = placed[jid]
+                run = runs[rid]
+                if not run.job_finished(jobk):
+                    continue
+                wait = dispatch_round[jid] - submit_round.get(jid, 0)
+                job.result = run.job_result(jobk, self._alloc_cycles,
                                             wait_rounds=wait)
-                    job.state = "done"
-                    rounds_held = max(1, rnd + 1 - dispatch_round[jid])
-                    tn.accountant.charge(job.user,
-                                         job.trip.nnode * rounds_held)
+                run.adopted_pack.pop(jobk, None)
+                job.state = "done"
+                rounds_held = max(1, rnd + 1 - dispatch_round[jid])
+                is_host = jobk == 0
+                # a lane-backfilled job ran on nodes its user already pays
+                # for via the host gang — no extra node-time is charged
+                node_time = job.trip.nnode * rounds_held if is_host else 0
+                if is_host:
+                    charged_rounds[rid] = rounds_held
+                tn.accountant.charge(job.user, node_time)
+                lanes = granted_lanes.get(jid, job.trip.total_slots)
+                if tn.gauges is not None:
+                    tn.gauges.on_release(
+                        job.user,
+                        nodes=job.trip.nnode if is_host else 0,
+                        node_time=float(node_time),
+                        lanes=lanes,
+                        resident_bytes=int(job.bytes_per_lane * lanes))
+                done[jid] = job.result
+                del active_jobs[jid]
+            for rid in list(runs):      # release fully-drained gangs
+                run = runs[rid]
+                if run.finished and not any(
+                        placed[jid][0] == rid for jid in active_jobs):
+                    # an adopted job that outlived the host (retries,
+                    # replans) kept the nodes held past the host's own
+                    # completion: charge the gang's user for those rounds
+                    total_rounds = max(1, rnd + 1 - dispatch_round[rid])
+                    extra = total_rounds - charged_rounds.pop(
+                        rid, total_rounds)
+                    if extra > 0:
+                        tail_time = float(run.trip.nnode * extra)
+                        tn.accountant.charge(run.user, tail_time)
+                        if tn.gauges is not None:
+                            tn.gauges.gauge(run.user).node_time += tail_time
+                    run.release()
                     if tn.gauges is not None:
-                        tn.gauges.on_release(
-                            job.user, nodes=job.trip.nnode,
-                            node_time=float(job.trip.nnode * rounds_held),
-                            lanes=job.trip.total_slots,
-                            resident_bytes=int(job.bytes_per_lane
-                                               * job.trip.total_slots))
-                    done[jid] = job.result
-                    del active[jid]
+                        tn.gauges.on_gang_done(f"gang:{rid}")
+                    del runs[rid]
+                    del hosts[rid]
             rnd += 1
         return done
 
-    def _run_one(self, task: Task, slot: T.SlotAssignment, trip: T.Triples,
+    def _run_one(self, key: Tuple[int, int], task: Task,
+                 slot: T.SlotAssignment, trip: T.Triples,
                  results: dict, failed: dict, pending_retry: list):
         ctx = TaskCtx(task_id=task.id, node=slot.node, slot=slot.slot,
                       chips=slot.chips, pack_lane=slot.pack_lane,
@@ -430,24 +598,24 @@ class TriplesScheduler:
             task.state = "running"
             task.result = task.fn(ctx)
             task.state = "done"
-            results[task.id] = task.result
+            results[key] = task.result
             self._log("done", task=task.id)
         except NodeDown as nd:
             self.cluster.fail_node(nd.node)
             self._log("node_down", node=nd.node, task=task.id)
-            pending_retry.append(task.id)
+            pending_retry.append(key)
         except TaskOOM as e:
             task.state = "failed"
             self._log("oom", task=task.id, err=str(e))
-            failed[task.id] = f"oom: {e}"
+            failed[key] = f"oom: {e}"
         except TaskError as e:
             task.retries += 1
             if task.retries <= self.policy.max_retries:
                 self._log("retry", task=task.id, attempt=task.retries)
-                pending_retry.append(task.id)
+                pending_retry.append(key)
             else:
                 task.state = "failed"
-                failed[task.id] = str(e)
+                failed[key] = str(e)
                 self._log("fail", task=task.id, err=str(e))
 
     # ------------------------------------------------- job-array comparison

@@ -55,6 +55,8 @@ class SimJobStats:
     end_t: float
     pack_factor: int
     eff_trip: T.Triples
+    adopted: bool = False               # started on another gang's free
+                                        # lanes (lane-level refill)
 
     @property
     def wait_s(self) -> float:
@@ -71,6 +73,7 @@ class SimReport:
     node_util: float                    # busy node-s / (nodes × makespan)
     effective_util: float               # useful chip-s / (chips × makespan)
     throughput: float                   # completed tasks / makespan
+    lane_backfills: int = 0             # jobs started on free lanes
 
     def mean_wait(self, user: Optional[str] = None) -> float:
         ws = [s.wait_s for s in self.stats
@@ -113,20 +116,49 @@ def job_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
     return waves * job.task_s * (1.0 + pack_slowdown * (pack - 1))
 
 
+@dataclasses.dataclass
+class _Alloc:
+    """One whole-node allocation — possibly hosting several jobs under
+    lane-level refill. Nodes free when the LAST hosted job finishes."""
+    nodes: int
+    start: float
+    user: str
+    host_trip: T.Triples
+    bytes_per_lane: float
+    outstanding: int = 1
+    spare: int = 0                      # free lanes during the tail wave
+    spare_from: float = math.inf        # when the tail wave starts
+    # jid -> (pack_factor, bytes_per_lane) of still-running adopted jobs;
+    # the admission veto counts every co-resident, not just the host
+    adopted_pack: Dict[int, Tuple[int, float]] = dataclasses.field(
+        default_factory=dict)
+
+
 def simulate(jobs: List[SimJob], n_nodes: int,
              node_spec: Optional[T.NodeSpec] = None, *,
              mode: str = "shared",
              quotas: Optional[Dict[str, ten.TenantQuota]] = None,
              admission: Optional[ten.MemoryAdmission] = None,
              backfill: bool = True,
+             lane_refill: bool = False,
              pack_slowdown: float = 0.15,
              half_life: Optional[float] = None) -> SimReport:
-    """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes."""
+    """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes.
+
+    With ``lane_refill`` (shared mode only), a queued job of a user that
+    already has a running gang with free tail-wave lanes starts on those
+    lanes instead of waiting for whole nodes (the simulator model of the
+    live scheduler's lane-level backfill): the allocation's nodes stay
+    held until every hosted job finishes, and the adopted job consumes
+    zero fresh nodes. Mirrors core/lanepool.py's continuous refill at
+    job granularity.
+    """
     if mode not in ("shared", "exclusive"):
         raise ValueError(f"mode must be shared|exclusive, got {mode!r}")
     node_spec = node_spec or T.NodeSpec()
-    if mode == "exclusive":             # the baseline has no fair-share or
-        quotas, admission, backfill = None, None, False   # admission layer
+    if mode == "exclusive":             # the baseline has no fair-share,
+        quotas, admission = None, None            # admission or refill
+        backfill, lane_refill = False, False      # layer
     acct = ten.FairShareAccountant(quotas, half_life=half_life)
     queue = ten.JobQueue(acct)
     pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
@@ -140,17 +172,36 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         seq += 1
 
     free = n_nodes
-    running: Dict[int, Tuple[int, float, float]] = {}  # jid -> (nodes, end, start)
+    allocs: Dict[int, _Alloc] = {}      # alloc id (host jid) -> state
+    running: Dict[int, Tuple[int, float]] = {}   # jid -> (alloc id, end)
     held: Dict[str, int] = {}
     stats: List[SimJobStats] = []
     busy_node_s = 0.0
     useful_chip_s = 0.0
     completed_tasks = 0
     makespan = 0.0
+    lane_backfills = 0
+
+    def admit_on_lanes(pj: ten.PendingJob, aid: int) -> bool:
+        """Combined host+adopted per-chip footprint must stay admissible
+        (conservative: both at the larger per-lane footprint)."""
+        if admission is None:
+            return True
+        al = allocs[aid]
+        job, eff, _ = pending_payload[pj.id]
+        co = [(al.host_trip.pack_factor(node_spec), al.bytes_per_lane),
+              *al.adopted_pack.values(),
+              (eff.pack_factor(node_spec), float(pj.bytes_per_lane))]
+        return admission.admit_colocated([p for p, _ in co],
+                                         [b for _, b in co])
 
     def dispatch(now: float):
-        nonlocal free, seq
-        running_view = [(n, end - now) for n, end, _ in running.values()]
+        nonlocal free, seq, lane_backfills
+        alloc_end: Dict[int, float] = {}
+        for aid, end in running.values():
+            alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
+        running_view = [(allocs[aid].nodes, alloc_end[aid] - now)
+                        for aid in alloc_end]
         for pj in queue.pop_dispatchable(free, running_view,
                                          held_by_user=held,
                                          backfill=backfill):
@@ -158,10 +209,54 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             free -= eff.nnode
             held[job.user] = held.get(job.user, 0) + eff.nnode
             end = now + duration
-            running[job.id] = (eff.nnode, end, now)
+            waves = max(1, math.ceil(job.n_tasks / eff.total_slots))
+            tail_occ = job.n_tasks - (waves - 1) * eff.total_slots
+            al = _Alloc(nodes=eff.nnode, start=now, user=job.user,
+                        host_trip=eff, bytes_per_lane=float(job.bytes_per_lane),
+                        spare=eff.total_slots - tail_occ,
+                        spare_from=now + (waves - 1) * (duration / waves))
+            allocs[job.id] = al
+            running[job.id] = (job.id, end)
             stats.append(SimJobStats(job=job, start_t=now, end_t=end,
                                      pack_factor=eff.pack_factor(node_spec),
                                      eff_trip=eff))
+            heapq.heappush(heap, (end, seq, "finish", job))
+            seq += 1
+            if lane_refill and al.spare > 0:
+                heapq.heappush(heap, (al.spare_from, seq, "spare", job))
+                seq += 1
+        if not lane_refill:
+            return
+        # lane-level refill: queued jobs onto free tail-wave lanes of a
+        # same-user gang (zero fresh nodes; nodes stay held until every
+        # hosted job finishes)
+        alloc_end: Dict[int, float] = {}
+        for aid, end in running.values():
+            alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
+        lane_view: Dict[str, List[Tuple[int, int, float]]] = {}
+        for aid, al in allocs.items():
+            if al.outstanding and al.spare > 0 and al.spare_from <= now:
+                lane_view.setdefault(al.user, []).append(
+                    (aid, al.spare, alloc_end.get(aid, now) - now))
+        if not lane_view:
+            return
+        for pj, aid, granted in queue.pop_lane_backfill(lane_view,
+                                                        admit_on_lanes):
+            job, eff, _ = pending_payload.pop(pj.id)
+            al = allocs[aid]
+            al.spare -= granted
+            al.outstanding += 1
+            al.adopted_pack[pj.id] = (eff.pack_factor(node_spec),
+                                      float(job.bytes_per_lane))
+            # narrower than requested: more waves at the granted width
+            duration = ten.JobQueue.scaled_est(pj, granted)
+            pack = eff.pack_factor(node_spec)
+            end = now + duration
+            running[job.id] = (aid, end)
+            lane_backfills += 1
+            stats.append(SimJobStats(job=job, start_t=now, end_t=end,
+                                     pack_factor=pack,
+                                     eff_trip=eff, adopted=True))
             heapq.heappush(heap, (end, seq, "finish", job))
             seq += 1
 
@@ -184,13 +279,22 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             queue.push(ten.PendingJob(
                 id=job.id, user=job.user, n_nodes=eff.nnode,
                 submit_seq=queue.next_seq(), submit_t=job.submit_t,
-                est_duration=duration, bytes_per_lane=job.bytes_per_lane))
-        else:                           # finish
-            n, end, start = running.pop(job.id)
-            free += n
-            held[job.user] = held.get(job.user, 0) - n
-            acct.charge(job.user, n * (end - start))   # fair-share usage
+                est_duration=duration, bytes_per_lane=job.bytes_per_lane,
+                n_slots=eff.total_slots, n_tasks=job.n_tasks))
+        elif kind == "finish":
+            aid, end = running.pop(job.id)
+            al = allocs[aid]
+            al.outstanding -= 1
+            al.adopted_pack.pop(job.id, None)
             makespan = max(makespan, end)
+            if al.outstanding == 0:     # last hosted job out: nodes free
+                free += al.nodes
+                held[al.user] = held.get(al.user, 0) - al.nodes
+                acct.charge(al.user, al.nodes * (end - al.start))
+                busy_node_s += al.nodes * (end - al.start)
+                del allocs[aid]
+        # "spare" events carry no state change — they just give dispatch()
+        # a chance to place lane backfills the moment a tail wave opens
         dispatch(t)
 
     for pj in queue.ordered():          # drained heap, still queued: these
@@ -198,7 +302,6 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         rejected.append((job, "never dispatched (quota or capacity)"))
 
     for s in stats:                     # account completed work
-        busy_node_s += s.eff_trip.nnode * (s.end_t - s.start_t)
         useful_chip_s += (s.job.n_tasks * s.job.task_s * s.job.trip.ntpp
                           * s.job.load_frac)
         completed_tasks += s.job.n_tasks
@@ -209,7 +312,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         rejected=rejected,
         node_util=busy_node_s / (n_nodes * makespan) if makespan else 0.0,
         effective_util=useful_chip_s / (chips * makespan) if makespan else 0.0,
-        throughput=completed_tasks / makespan if makespan else 0.0)
+        throughput=completed_tasks / makespan if makespan else 0.0,
+        lane_backfills=lane_backfills)
 
 
 # ---------------------------------------------------------------------------
@@ -219,7 +323,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
 def mixed_workload(node_spec: Optional[T.NodeSpec] = None, *,
                    n_sweep_jobs: int = 6, sweep_tasks: int = 64,
                    n_train_jobs: int = 2, train_nodes: int = 4,
-                   n_serve_jobs: int = 4,
+                   n_serve_jobs: int = 4, n_eval_jobs: int = 0,
                    inter_arrival_s: float = 20.0) -> List[SimJob]:
     """The paper's facility mix, three tenants:
 
@@ -228,6 +332,10 @@ def mixed_workload(node_spec: Optional[T.NodeSpec] = None, *,
       * bob   — gang training: whole nodes, NTPP = chips (one big task per
         node), long-running. Creates the contention sweeps backfill around.
       * carol — batch serving: short medium jobs, modest packing.
+
+    ``n_eval_jobs`` adds short alice eval bursts (few tasks, sub-second):
+    the jobs lane-level refill (DESIGN.md §7) exists for — small enough to
+    drain inside a sweep's tail wave on its free lanes.
     """
     node_spec = node_spec or T.NodeSpec()
     cpn = node_spec.chips_per_node
@@ -254,21 +362,33 @@ def mixed_workload(node_spec: Optional[T.NodeSpec] = None, *,
         add("carol", "serve", 5.0 + i * 1.5 * inter_arrival_s, 2 * cpn, 4.0,
             T.Triples(nnode=1, nppn=2 * cpn, ntpp=1),
             bpl=4e9, load=0.4)          # pack 2 fits, pack 4 would not
+    for i in range(n_eval_jobs):
+        add("alice", "sweep", 2.0 + i * 0.5 * inter_arrival_s, cpn, 0.5,
+            T.Triples(nnode=1, nppn=cpn, ntpp=1),
+            bpl=1.5e9, load=0.25)       # short eval burst: fits a tail wave
     return jobs
 
 
 def compare_modes(jobs: List[SimJob], n_nodes: int,
                   node_spec: Optional[T.NodeSpec] = None,
+                  lane_refill: bool = False,
                   **kw) -> Dict[str, SimReport]:
-    """Run the same workload under both policies."""
+    """Run the same workload under both policies. With ``lane_refill`` a
+    third report, ``shared+refill``, adds lane-level backfill on top of
+    the shared policy so the refill gain is isolated."""
     node_spec = node_spec or T.NodeSpec()
     admission = kw.pop("admission", ten.MemoryAdmission(node_spec))
-    return {
+    out = {
         "exclusive": simulate(jobs, n_nodes, node_spec, mode="exclusive",
                               **kw),
         "shared": simulate(jobs, n_nodes, node_spec, mode="shared",
                            admission=admission, **kw),
     }
+    if lane_refill:
+        out["shared+refill"] = simulate(jobs, n_nodes, node_spec,
+                                        mode="shared", admission=admission,
+                                        lane_refill=True, **kw)
+    return out
 
 
 def comparison_table(reports: Dict[str, SimReport]) -> str:

@@ -153,6 +153,20 @@ class MemoryAdmission:
                 f"pack_factor {want} exceeds footprint cap {cap}")
         return AdmissionDecision(True, want, cap, "fits")
 
+    def admit_colocated(self, packs: Sequence[int],
+                        bytes_per_lanes: Sequence[float]) -> bool:
+        """May these jobs co-reside on one gang's chips? True when their
+        combined per-chip lane count fits the budget, conservatively
+        pricing every lane at the LARGEST per-lane footprint among them.
+        Jobs with unknown footprints (all <= 0) are unconstrained. Used
+        by lane-level backfill — live scheduler and simulator share this
+        one formula so their decisions cannot drift apart (DESIGN.md §7).
+        """
+        bpl = max(bytes_per_lanes, default=0.0)
+        if bpl <= 0:
+            return True
+        return sum(packs) <= self.max_pack(bpl)
+
     def clamp(self, trip: T.Triples, bytes_per_lane: float) -> T.Triples:
         """Largest admissible triples ≤ the request (shrink NPPN).
 
@@ -180,6 +194,9 @@ class PendingJob:
     submit_t: float = 0.0
     est_duration: float = 0.0           # rounds (live) or seconds (sim)
     bytes_per_lane: float = 0.0
+    n_slots: int = 0                    # lanes the job wants (0 = unknown —
+                                        # such a job never lane-backfills)
+    n_tasks: int = 0                    # work units (width-rescales est)
     payload: object = None              # scheduler Tasks / SimJob / anything
 
 
@@ -275,5 +292,63 @@ class JobQueue:
                 spare -= min(spare, job.n_nodes) if fits_spare else 0
                 held[job.user] = held.get(job.user, 0) + job.n_nodes
         for job in out:
+            self._pending.remove(job)
+        return out
+
+    @staticmethod
+    def scaled_est(job: PendingJob, granted: int) -> float:
+        """``est_duration`` rescaled from the requested width to ``granted``
+        lanes (exact when ``n_tasks`` is known: duration ∝ wave count)."""
+        if granted >= job.n_slots:
+            return job.est_duration
+        if job.n_tasks > 0:
+            full_waves = math.ceil(job.n_tasks / job.n_slots)
+            return job.est_duration * (math.ceil(job.n_tasks / granted)
+                                       / max(1, full_waves))
+        return job.est_duration * (job.n_slots / granted)
+
+    def pop_lane_backfill(self, lane_view: Dict[str,
+                                                List[Tuple[int, int, float]]],
+                          admit=None) -> List[Tuple[PendingJob, int, int]]:
+        """Remove and return jobs that may start on FREE LANES of a gang
+        their own user is already running (lane-level backfill).
+
+        ``lane_view`` maps user -> [(run_id, free_lane_count,
+        host_remaining)] for active gangs. A queued job claims ``granted =
+        min(free, n_slots)`` lanes (narrower than requested is allowed:
+        continuous refill takes the lanes that exist) PROVIDED its
+        width-rescaled duration fits inside the host's remaining time — so
+        adoption can never extend the allocation, never delay the host
+        gang (whose own tasks keep their slots), and never move anyone's
+        EASY reservation: it consumes zero nodes and zero extra
+        node-time. The whole-node single-owner invariant is preserved by
+        construction: lanes are only adopted from gangs of the SAME user.
+        Jobs with unknown duration (``est_duration <= 0``) never adopt —
+        the no-extension guarantee could not be checked. ``admit(job,
+        run_id) -> bool`` lets the caller veto on memory footprint. The
+        gang with the most free lanes is preferred.
+
+        Returns ``[(job, run_id, granted_lanes)]`` in fair-share order.
+        """
+        avail = {u: [list(rv) for rv in runs]
+                 for u, runs in lane_view.items()}
+        out: List[Tuple[PendingJob, int, int]] = []
+        for job in self.ordered():
+            if job.n_slots <= 0 or job.est_duration <= 0:
+                continue
+            for rv in sorted(avail.get(job.user, ()),
+                             key=lambda rv: -rv[1]):
+                run_id, free_slots, remaining = rv
+                if free_slots < 1:
+                    continue
+                granted = min(free_slots, job.n_slots)
+                if self.scaled_est(job, granted) > remaining:
+                    continue            # would outlive the host allocation
+                if admit is not None and not admit(job, run_id):
+                    continue
+                rv[1] -= granted
+                out.append((job, run_id, granted))
+                break
+        for job, _, _ in out:
             self._pending.remove(job)
         return out

@@ -1,9 +1,24 @@
-"""Serving driver: prefill + batched decode (continuous-batching-lite).
+"""Serving driver: prefill + continuously-batched decode on a lane pool.
 
 The serve_step builders are what the dry-run lowers for decode shapes; the
-``BatchServer`` is a runnable mini-server for the examples: fixed-size lane
-pool, new requests join as lanes free up (the inference-side analogue of
-the paper's concurrent-jobs-per-GPU packing).
+``BatchServer`` is a runnable mini-server for the examples. It is TRUE
+continuous batching (the inference-side analogue of the paper's
+concurrent-jobs-per-GPU packing, on the persistent-lane-pool model of
+core/lanepool.py):
+
+  * the decode state is a fixed-capacity pool — per-lane KV caches stacked
+    on a leading lane axis, decode compiled ONCE as a vmap over lanes;
+  * a request joins MID-DECODE the moment a lane frees: its prompt is
+    prefilled at batch 1 and its cache swapped into the free lane via a
+    pytree index update (no recompilation, other lanes undisturbed);
+  * a finished lane stops burning decode budget — its request is retired
+    immediately (``Request.done``) and the next queued request takes the
+    lane, so total active lane-steps equal the sum of per-request
+    ``max_new``, not ``capacity × max(max_new)`` (the wave-mode waste).
+
+Lanes are independent under vmap, so a request's tokens are identical
+whatever co-residents it decodes next to (prompts are left-padded to one
+fixed length per ``run``).
 """
 from __future__ import annotations
 
@@ -14,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import packing
 from repro.models.model import Model
 
 
@@ -39,40 +55,101 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class ServeStats:
+    """Decode accounting for the last ``BatchServer.run``."""
+    global_steps: int = 0         # vmapped decode invocations
+    lane_steps: int = 0           # active lane-steps (tokens produced)
+    prefills: int = 0
+    n_requests: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        if not self.global_steps:
+            return 0.0
+        return self.lane_steps / self.global_steps
+
+
 class BatchServer:
-    """Greedy-decode server over a fixed lane pool."""
+    """Greedy-decode server over a persistent lane pool."""
 
     def __init__(self, model: Model, params, batch_lanes: int, max_len: int):
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.max_len = max_len
+        self.stats = ServeStats()
         self._prefill = jax.jit(make_prefill(model, max_len))
-        self._step = jax.jit(make_serve_step(model), donate_argnums=(2,))
+        # decode one lane at batch 1, vmapped over the lane axis of the
+        # cache pool — compiled once per run() shape set
+        self._step = jax.jit(jax.vmap(make_serve_step(model),
+                                      in_axes=(None, 0, 0)),
+                             donate_argnums=(2,))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        queue = list(requests)
-        results: Dict[int, List[int]] = {}
-        while queue:
-            active = queue[:self.lanes]
-            queue = queue[self.lanes:]
-            B = len(active)
-            S = max(len(r.prompt) for r in active)
-            toks = np.zeros((B, S), np.int32)
-            for i, r in enumerate(active):
-                toks[i, -len(r.prompt):] = r.prompt  # left-pad
-            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
-            pos = jnp.full((B,), S, jnp.int32)
-            max_new = max(r.max_new for r in active)
-            outs = [[] for _ in active]
-            for t in range(max_new):
-                for i in range(B):
-                    outs[i].append(int(cur[i]))
-                logits, cache = self._step(
-                    self.params, {"tokens": cur[:, None], "pos": pos}, cache)
-                cur = jnp.argmax(logits, -1).astype(jnp.int32)
-                pos = pos + 1
-            for r, o in zip(active, outs):
-                results[r.id] = o[:r.max_new]
+        queue = [r for r in list(requests) if r.max_new > 0]
+        for r in requests:
+            if r.max_new <= 0:
+                r.done = True
+        results: Dict[int, List[int]] = {r.id: r.out for r in requests}
+        self.stats = ServeStats(n_requests=len(queue))
+        if not queue:
+            return results
+        C = min(self.lanes, len(queue))
+        S_pad = max(len(r.prompt) for r in queue)
+
+        def prefill_one(r: Request):
+            toks = np.zeros((1, S_pad), np.int32)
+            toks[0, S_pad - len(r.prompt):] = r.prompt   # left-pad
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)})
+            self.stats.prefills += 1
+            first = jnp.argmax(logits, -1).astype(jnp.int32)   # (1,)
+            return first, cache
+
+        # seed the pool from the first prefill so every leaf has its lane
+        # axis before any swap (shapes fixed for the whole run)
+        first0, cache0 = prefill_one(queue[0])
+        pool_cache = packing.stack_trees([cache0] * C)
+        cur = np.zeros((C, 1, 1), np.int32)          # per-lane (B=1, T=1)
+        pos = np.full((C, 1), S_pad, np.int32)
+        lane_req: List[Optional[Request]] = [None] * C
+
+        def attach(lane: int, r: Request, first=None, cache=None):
+            nonlocal pool_cache
+            if first is None:
+                first, cache = prefill_one(r)
+            pool_cache = packing.tree_set_lane(pool_cache, lane, cache)
+            cur[lane, 0, 0] = int(first[0])
+            pos[lane, 0] = S_pad
+            lane_req[lane] = r
+
+        attach(0, queue.pop(0), first0, cache0)
+        for lane in range(1, C):
+            if queue:
+                attach(lane, queue.pop(0))
+
+        while any(r is not None for r in lane_req):
+            active = np.array([r is not None for r in lane_req])
+            # record the token each active lane is about to consume/emit
+            for lane, r in enumerate(lane_req):
+                if r is not None:
+                    r.out.append(int(cur[lane, 0, 0]))
+            logits, pool_cache = self._step(
+                self.params,
+                {"tokens": jnp.asarray(cur), "pos": jnp.asarray(pos)},
+                pool_cache)
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)   # (C, 1)
+            self.stats.global_steps += 1
+            self.stats.lane_steps += int(active.sum())
+            cur[active, 0, 0] = nxt[active, 0]
+            pos[active, 0] += 1          # inactive lanes stay frozen
+            for lane, r in enumerate(lane_req):
+                if r is None:
+                    continue
+                if len(r.out) >= r.max_new:
+                    r.done = True        # lane frees NOW — no wave barrier
+                    lane_req[lane] = None
+                    if queue:            # a waiting request joins mid-decode
+                        attach(lane, queue.pop(0))
         return results

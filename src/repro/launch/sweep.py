@@ -2,8 +2,18 @@
 
 Runs K training tasks (same architecture, different hyperparameters / data
 seeds) under a triples placement: auto_nppn picks the largest safe packing
-factor, tasks pack as vmapped lanes, the monitor watches for stragglers,
-checkpoints make OOM-backoff / node-loss recovery lossless.
+factor, tasks run as lanes of a persistent lane pool (core/lanepool.py)
+with CONTINUOUS REFILL — the moment a lane's task exhausts its per-task
+step budget (``SweepTask.steps``) or early-stops, the next queued task
+attaches in its place, between two masked steps. The pool is compiled once
+over the packing factor; no wave boundary, no recompilation, no idle lanes
+while work remains queued.
+
+Checkpoints are per task (``{checkpoint_dir}/task_{id}``), written when a
+lane detaches and every ``FaultPolicy.checkpoint_every`` steps mid-flight;
+a re-run restores each task's saved state and skips the finished steps. OOM-backoff halves the pool capacity and re-enqueues the
+unfinished tasks (in-flight progress of the failed pool is discarded, as a
+packed-program OOM kills all lanes at once).
 """
 from __future__ import annotations
 
@@ -17,8 +27,10 @@ import numpy as np
 
 from repro import optim
 from repro.checkpoint import Checkpointer
-from repro.core import autotune, packing, triples as T
-from repro.core.faults import FaultPolicy, TaskOOM
+from repro.core import autotune, packing
+from repro.core.faults import FaultPolicy
+from repro.core.lanepool import (LanePool, LaneTask, PoolStepError,
+                                 RefillExecutor)
 from repro.core.monitor import RunMonitor, TenantGauges
 from repro.core.tenancy import MemoryAdmission
 from repro.launch.train import make_train_step
@@ -30,6 +42,7 @@ class SweepTask:
     id: int
     lr: float
     seed: int
+    steps: Optional[int] = None         # per-task budget (None = sweep-wide)
 
 
 @dataclasses.dataclass
@@ -40,6 +53,10 @@ class SweepResult:
     backoffs: int = 0
     bytes_per_lane: int = 0             # admission footprint (0 = unprobed)
     admission_capped: bool = False      # pack shrunk by MemoryAdmission
+    global_steps: int = 0               # masked pool steps executed
+    lane_steps: int = 0                 # active lane-steps (useful work)
+    refills: int = 0                    # lane attaches performed
+    n_traces: int = 0                   # jit traces of the packed step
 
 
 def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
@@ -52,13 +69,19 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
               opt: Optional[optim.Optimizer] = None,
               admission: Optional[MemoryAdmission] = None,
               tenant: str = "default",
-              gauges: Optional[TenantGauges] = None) -> SweepResult:
-    """Train all tasks; packing factor chosen by the memory guard.
+              gauges: Optional[TenantGauges] = None,
+              early_stop: Optional[Callable[[SweepTask, int, float], bool]]
+              = None) -> SweepResult:
+    """Train all tasks on a continuously-refilled lane pool.
 
-    With ``admission`` set, the per-lane footprint of the compiled
-    single-lane step caps the packing factor BEFORE the first wave runs
-    (multi-tenant admission control, DESIGN.md §4.3); ``gauges`` charges
-    the waves to ``tenant`` in the shared per-tenant LLload table."""
+    ``steps`` is the sweep-wide budget; a task's own ``SweepTask.steps``
+    overrides it (skewed-duration sweeps). ``early_stop(task, step, loss)``
+    may retire a lane early — its slot refills immediately. With
+    ``admission`` set, the per-lane footprint of the compiled single-lane
+    step caps the pool capacity BEFORE anything runs (multi-tenant
+    admission control, DESIGN.md §4.3); ``gauges`` charges the pool to
+    ``tenant`` in the shared per-tenant LLload table and receives per-step
+    lane-occupancy samples for the ``sweep:{tenant}`` gang."""
     policy = policy or FaultPolicy()
     opt = opt or optim.adamw(weight_decay=0.0)
     step_fn = make_train_step(model, opt)
@@ -90,7 +113,7 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
     else:
         pack = min(max_pack, n)
 
-    # ---- memory-aware admission: footprint caps the pack up front ----
+    # ---- memory-aware admission: footprint caps the pool up front ----
     bytes_per_lane = 0
     admission_capped = False
     if admission is not None:
@@ -106,66 +129,136 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
         if pack > cap:
             pack, admission_capped = cap, True
 
-    # ---- run waves of `pack` lanes ----
+    # ---- continuous refill over a persistent lane pool ----
     t0 = time.perf_counter()
     losses: Dict[int, List[float]] = {t.id: [] for t in tasks}
-    packed_fn = packing.packed_step(step_fn)
     mon = RunMonitor(straggler_ratio=policy.straggler_ratio)
     backoffs = 0
+    totals = dict(global_steps=0, lane_steps=0, refills=0, n_traces=0)
+    gang = f"sweep:{tenant}"
 
-    queue = list(tasks)
+    # ONE Checkpointer per task for the whole sweep: its save(blocking=
+    # False) joins the previous thread, so async saves to a task dir
+    # serialize and restore can never race a garbage collection
+    _cks: Dict[int, Checkpointer] = {}
+    _restored_done: set = set()         # finished in a PREVIOUS run: skip,
+                                        # and do not re-save their artifact
+
+    def ck_for(task_id: int) -> Checkpointer:
+        if task_id not in _cks:
+            _cks[task_id] = Checkpointer(f"{checkpoint_dir}/task_{task_id}")
+        return _cks[task_id]
+
+    def make_lane_task(t: SweepTask) -> LaneTask:
+        budget = steps if t.steps is None else t.steps
+        lt = LaneTask(id=t.id, hparams=jnp.float32(t.lr), init_fn=None,
+                      batch_fn=lambda s, seed=t.seed: batch_fn(seed, s),
+                      steps=budget)
+
+        def init_fn(lt=lt, t=t):
+            params = model.init(jax.random.PRNGKey(t.seed))
+            opt_state = opt.init(params)
+            lt.step_done = 0
+            if checkpoint_dir:
+                try:
+                    (params, opt_state), start, extra = ck_for(
+                        t.id).restore((params, opt_state))
+                    lt.step_done = start
+                    if extra.get("done"):   # finished or early-stopped in
+                        lt.step_done = lt.steps     # a previous run: skip
+                        _restored_done.add(t.id)
+                except FileNotFoundError:
+                    pass
+            # keep the recorded history consistent with the attach point
+            # (covers both OOM-backoff re-attach — resume from the last
+            # mid-flight save, dropping unsaved steps — and fresh restart)
+            losses[t.id] = losses[t.id][:lt.step_done]
+            return params, opt_state
+
+        lt.init_fn = init_fn
+        return lt
+
+    by_id = {t.id: t for t in tasks}
+    queue = [make_lane_task(t) for t in tasks]
+    template = model.init(jax.random.PRNGKey(0))
     while queue:
-        wave = queue[:pack]
-        queue = queue[pack:]
-        k = len(wave)
-        t_wave = time.perf_counter()
+        pool = LanePool(min(pack, len(queue)), step_fn,
+                        template_params=template,
+                        template_opt=opt.init(template),
+                        template_hparams=jnp.float32(0.0))
         if gauges is not None:
-            gauges.on_dispatch(tenant, nodes=1, lanes=k,
-                               resident_bytes=bytes_per_lane * k)
-        keys = jnp.stack([jax.random.PRNGKey(t.seed) for t in wave])
-        params = packing.pack_init(model.init, keys)
-        opt_state = jax.vmap(opt.init)(params)
-        lrs = jnp.asarray([t.lr for t in wave], jnp.float32)
-        ckpt = (Checkpointer(f"{checkpoint_dir}/wave_{wave[0].id}")
-                if checkpoint_dir else None)
-        start = 0
-        if ckpt is not None:
-            try:
-                (params, opt_state), start, _ = ckpt.restore((params, opt_state))
-            except FileNotFoundError:
-                pass
-        for step in range(start, steps):
-            batch = packing.stack_trees([
-                jax.tree_util.tree_map(jnp.asarray, batch_fn(t.seed, step))
-                for t in wave])
-            mon.start_step()
-            try:
-                params, opt_state, metrics = packed_fn(
-                    params, opt_state, batch, lrs)
-            except Exception as e:  # OOM backoff: halve, re-enqueue halves
-                if policy.oom_backoff and k > policy.min_pack_factor:
-                    backoffs += 1
-                    pack = max(policy.min_pack_factor, pack // 2)
-                    queue = list(wave) + queue
-                    params = opt_state = None
-                    break
-                raise
-            mon.end_step(step)
-            loss_vec = np.asarray(metrics["loss"])
-            for i, t in enumerate(wave):
-                losses[t.id].append(float(loss_vec[i]))
-            if ckpt is not None and policy.checkpoint_every and \
-                    (step + 1) % policy.checkpoint_every == 0:
-                ckpt.save((params, opt_state), step + 1, blocking=False)
-        if ckpt is not None and params is not None:
-            ckpt.save((params, opt_state), steps)
-            ckpt.wait()
+            gauges.on_dispatch(tenant, nodes=1, lanes=pool.capacity,
+                               resident_bytes=bytes_per_lane * pool.capacity)
+        t_pool = time.perf_counter()
+        finished: set = set()
+
+        def on_metrics(lt: LaneTask, step_idx: int, lane_metrics) -> bool:
+            losses[lt.id].append(float(np.asarray(lane_metrics["loss"])))
+            if early_stop is not None:
+                return bool(early_stop(by_id[lt.id], step_idx,
+                                       losses[lt.id][-1]))
+            return False
+
+        def on_finish(lt: LaneTask, params, opt_state):
+            finished.add(lt.id)
+            if checkpoint_dir and lt.id not in _restored_done:
+                ck = ck_for(lt.id)      # async path joins the pending
+                ck.save((params, opt_state), lt.step_done,
+                        extra={"done": True}, blocking=False)
+                ck.wait()               # mid-flight save before this one
+
+        def on_checkpoint(lt: LaneTask, params, opt_state):
+            ck_for(lt.id).save((params, opt_state), lt.step_done,
+                               blocking=False)
+
+        def on_step(global_step: int, active: int, capacity: int):
+            mon.end_step(global_step)
+            if gauges is not None:
+                gauges.on_lane_sample(tenant, gang, active, capacity)
+
+        ex = RefillExecutor(
+            pool, on_metrics=on_metrics, on_finish=on_finish,
+            on_step_start=mon.start_step, on_step=on_step,
+            checkpoint_every=(policy.checkpoint_every
+                              if checkpoint_dir else 0),
+            on_checkpoint=on_checkpoint if checkpoint_dir else None)
+        try:
+            stats = ex.run(queue)
+        except PoolStepError:   # pool-wide OOM: halve capacity, redo
+                                # unfinished (callback bugs propagate raw)
+            if policy.oom_backoff and pack > policy.min_pack_factor:
+                backoffs += 1
+                pack = max(policy.min_pack_factor, pack // 2)
+                totals["n_traces"] += pool.n_traces
+                # unfinished tasks re-attach via init_fn, which resumes
+                # from their last saved checkpoint (or step 0) and trims
+                # the loss history to match — the failed pool's unsaved
+                # progress is lost, as a packed OOM kills all lanes
+                queue = [lt for lt in queue if lt.id not in finished]
+                if gauges is not None:
+                    gauges.on_release(
+                        tenant, nodes=1,
+                        node_time=time.perf_counter() - t_pool,
+                        lanes=pool.capacity,
+                        resident_bytes=bytes_per_lane * pool.capacity)
+                continue
+            raise
+        totals["global_steps"] += stats.global_steps
+        totals["lane_steps"] += stats.lane_steps
+        totals["refills"] += stats.attaches
+        totals["n_traces"] += stats.n_traces
         if gauges is not None:
             gauges.on_release(tenant, nodes=1,
-                              node_time=time.perf_counter() - t_wave,
-                              lanes=k, resident_bytes=bytes_per_lane * k)
+                              node_time=time.perf_counter() - t_pool,
+                              lanes=pool.capacity,
+                              resident_bytes=bytes_per_lane * pool.capacity)
+        queue = []
 
     return SweepResult(losses=losses, wall_s=time.perf_counter() - t0,
                        pack_factor=pack, backoffs=backoffs,
                        bytes_per_lane=bytes_per_lane,
-                       admission_capped=admission_capped)
+                       admission_capped=admission_capped,
+                       global_steps=totals["global_steps"],
+                       lane_steps=totals["lane_steps"],
+                       refills=totals["refills"],
+                       n_traces=totals["n_traces"])

@@ -61,6 +61,99 @@ def test_run_sweep_parametric_study():
     assert len({round(f, 6) for f in finals}) > 1
 
 
+def test_run_sweep_skewed_budgets_single_trace_continuous_refill():
+    """Skewed per-task budgets on a 2-lane pool: one jit trace for the
+    whole sweep (compile-once), budgets honoured exactly, and refill keeps
+    pool steps below the wave-mode cost."""
+    model = _tiny_lm()
+
+    def batch_fn(seed, step):
+        from repro.data import SyntheticLM
+        ds = SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=seed)
+        return ds.batch(step)
+
+    budgets = [2, 6, 3, 5, 2, 4]        # 3× pool capacity, skewed
+    tasks = [SweepTask(id=i, lr=1e-3, seed=i, steps=b)
+             for i, b in enumerate(budgets)]
+    res = run_sweep(model, tasks, batch_fn=batch_fn, steps=99, max_pack=2)
+    assert res.n_traces == 1
+    assert {i: len(v) for i, v in res.losses.items()} == dict(
+        enumerate(budgets))
+    assert res.lane_steps == sum(budgets)
+    # wave mode would cost ceil-pairs of max(budget) pool steps; refill
+    # packs the skew tight: strictly fewer global steps
+    wave_steps = 6 + 5 + 4              # waves (2,6),(3,5),(2,4) at max
+    assert res.global_steps < wave_steps
+    assert res.refills == len(tasks)
+
+
+def test_run_sweep_early_stop_frees_lane():
+    model = _tiny_lm()
+
+    def batch_fn(seed, step):
+        from repro.data import SyntheticLM
+        ds = SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=seed)
+        return ds.batch(step)
+
+    tasks = [SweepTask(id=i, lr=1e-3, seed=i) for i in range(3)]
+    res = run_sweep(model, tasks, batch_fn=batch_fn, steps=5, max_pack=3,
+                    early_stop=lambda t, s, loss: t.id == 1 and s >= 1)
+    assert len(res.losses[1]) == 2      # stopped after its 2nd step
+    assert len(res.losses[0]) == 5 and len(res.losses[2]) == 5
+
+
+def test_run_sweep_checkpoint_resume_skips_finished_tasks(tmp_path):
+    model = _tiny_lm()
+
+    def batch_fn(seed, step):
+        from repro.data import SyntheticLM
+        ds = SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=seed)
+        return ds.batch(step)
+
+    tasks = [SweepTask(id=i, lr=1e-3, seed=i) for i in range(2)]
+    ck = str(tmp_path / "sweep")
+    first = run_sweep(model, tasks, batch_fn=batch_fn, steps=3, max_pack=2,
+                      checkpoint_dir=ck,
+                      early_stop=lambda t, s, l: t.id == 1 and s >= 0)
+    assert len(first.losses[0]) == 3 and len(first.losses[1]) == 1
+    again = run_sweep(model, tasks, batch_fn=batch_fn, steps=3, max_pack=2,
+                      checkpoint_dir=ck)
+    # finished AND early-stopped tasks restore as done: no training runs
+    assert all(len(v) == 0 for v in again.losses.values())
+    assert again.lane_steps == 0
+
+
+def test_run_sweep_periodic_checkpoints_and_raw_callback_errors(tmp_path):
+    """FaultPolicy.checkpoint_every writes mid-flight per-task
+    checkpoints, and a buggy user callback propagates raw instead of
+    being misdiagnosed as a pool OOM (backoff would silently wipe
+    progress)."""
+    import os
+    from repro.core.faults import FaultPolicy
+    model = _tiny_lm()
+
+    def batch_fn(seed, step):
+        from repro.data import SyntheticLM
+        ds = SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=seed)
+        return ds.batch(step)
+
+    tasks = [SweepTask(id=0, lr=1e-3, seed=0)]
+    ck = str(tmp_path / "sweep")
+    run_sweep(model, tasks, batch_fn=batch_fn, steps=5, max_pack=1,
+              checkpoint_dir=ck, policy=FaultPolicy(checkpoint_every=2))
+    steps_saved = sorted(os.listdir(f"{ck}/task_0"))
+    assert "step_0000000002" in steps_saved     # mid-flight save
+    assert "step_0000000005" in steps_saved     # final save on detach
+
+    with pytest.raises(ZeroDivisionError):
+        run_sweep(model, tasks, batch_fn=batch_fn, steps=3, max_pack=1,
+                  early_stop=lambda t, s, l: 1 / 0)
+
+
 def test_llmapreduce_packed_vs_slotted():
     items = [jnp.float32(i) for i in range(9)]
     f = lambda x: x * x

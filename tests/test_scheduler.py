@@ -101,3 +101,37 @@ def test_elastic_replan_pure():
     assert set(st2.alive_nodes) == {0, 1, 3}
     replanned = sorted(t for s in st2.plan.slots for t in s.task_ids)
     assert replanned == list(range(4, 16))   # completed not re-run
+
+
+def test_surviving_results_only_replans_dead_node_tasks():
+    """Regression: ``dead_nodes`` was ignored, so healthy nodes' in-flight
+    tasks were re-planned (their work discarded) on ANY node loss."""
+    from repro.core.elastic import surviving_results
+    trip = T.Triples(4, 2, 1)
+    plan = T.plan(16, trip)              # node n holds slots 2n, 2n+1
+    dead_tasks = {t for s in plan.slots if s.node == 2 for t in s.task_ids}
+    kept, must = surviving_results(plan, completed={0, 1}, dead_nodes={2})
+    assert kept == {0, 1}
+    assert set(must) == dead_tasks - {0, 1}
+    # tasks on healthy nodes never appear in the replan list
+    healthy = {t for s in plan.slots if s.node != 2 for t in s.task_ids}
+    assert not set(must) & healthy
+
+
+def test_elastic_replan_keeps_healthy_placements():
+    """Node loss moves ONLY the dead node's unfinished tasks; every task
+    already placed on a surviving node stays exactly where it was."""
+    trip = T.Triples(4, 2, 1)
+    plan = T.plan(16, trip)
+    st = ElasticState(plan=plan, completed=frozenset(),
+                      alive_nodes=(0, 1, 2, 3))
+    before = {t: s.node for s in plan.slots for t in s.task_ids}
+    st2 = replan(st, dead_nodes={2})
+    after = {t: s.node for s in st2.plan.slots for t in s.task_ids}
+    assert set(after.values()) <= {0, 1, 3}
+    for tid, node in before.items():
+        if node != 2:                    # healthy placements untouched
+            assert after[tid] == node
+        else:                            # orphans moved to survivors
+            assert after[tid] in {0, 1, 3}
+    assert sorted(after) == sorted(before)   # nothing lost, nothing dup'd

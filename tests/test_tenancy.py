@@ -149,6 +149,17 @@ def test_admission_clamp_shrinks_nppn():
     assert adm.clamp(T.Triples(2, 4, 1), 4e9) == T.Triples(2, 4, 1)
 
 
+def test_admit_colocated_prices_everyone_at_largest_footprint():
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    adm = ten.MemoryAdmission(spec, headroom=0.9)   # cap 3 at 4 GB/lane
+    assert adm.admit_colocated([2, 1], [4e9, 1e9])      # 3 <= 3
+    assert not adm.admit_colocated([2, 2], [4e9, 1e9])  # 4 > 3
+    assert adm.admit_colocated([2, 2, 2], [0.0, 0.0, 0.0])  # unknown: free
+    # an unknown-footprint co-resident still counts its lanes once any
+    # neighbour's footprint is known
+    assert not adm.admit_colocated([2, 2], [0.0, 4e9])
+
+
 def test_scheduler_rejects_over_footprint_pack_before_dispatch():
     """The 21/48-OOM failure mode becomes an up-front rejection: the job
     never holds a node and no task ever runs."""
@@ -221,6 +232,164 @@ def test_max_nodes_quota_enforced():
     assert done == {}                   # over quota: never dispatched
     ok = s.submit("capped", [Task(id=0, fn=lambda ctx: 1)], T.Triples(1, 1, 1))
     assert ok.id in s.run_queued()
+
+
+# ---------------------------------------------------------------------------
+# lane-level backfill (free lanes on a running same-user gang)
+# ---------------------------------------------------------------------------
+
+def test_pop_lane_backfill_same_user_only_and_fit_rule():
+    q = ten.JobQueue()
+    q.push(ten.PendingJob(id=0, user="alice", n_nodes=1, n_slots=4,
+                          n_tasks=4, est_duration=1.0,
+                          submit_seq=q.next_seq()))
+    q.push(ten.PendingJob(id=1, user="bob", n_nodes=1, n_slots=4,
+                          n_tasks=4, est_duration=1.0,
+                          submit_seq=q.next_seq()))
+    # alice has a gang with 4 free lanes for 3 more rounds; bob has none
+    got = q.pop_lane_backfill({"alice": [(7, 4, 3.0)]})
+    assert [(pj.id, rid, granted) for pj, rid, granted in got] == [(0, 7, 4)]
+    assert len(q) == 1                   # bob's job stays queued
+
+
+def test_pop_lane_backfill_narrows_but_respects_no_extension():
+    q = ten.JobQueue()
+    # wants 8 lanes for 2 rounds; only 4 free -> 4 rounds narrowed
+    q.push(ten.PendingJob(id=0, user="u", n_nodes=1, n_slots=8,
+                          n_tasks=16, est_duration=2.0,
+                          submit_seq=q.next_seq()))
+    # host ends too soon at the narrowed width: must NOT adopt
+    assert q.pop_lane_backfill({"u": [(1, 4, 3.0)]}) == []
+    # enough remaining time: adopts at the granted (narrower) width
+    got = q.pop_lane_backfill({"u": [(1, 4, 5.0)]})
+    assert [(pj.id, rid, g) for pj, rid, g in got] == [(0, 1, 4)]
+
+
+def test_pop_lane_backfill_unknown_duration_never_adopts():
+    q = ten.JobQueue()
+    q.push(ten.PendingJob(id=0, user="u", n_nodes=1, n_slots=2,
+                          submit_seq=q.next_seq()))   # est_duration 0
+    assert q.pop_lane_backfill({"u": [(1, 8, 100.0)]}) == []
+    assert len(q) == 1
+
+
+def test_live_lane_backfill_small_job_rides_gang_free_lanes():
+    """A small same-user job claims free lanes of the running gang instead
+    of waiting for a whole node; results stay isolated; a foreign user
+    never lands on the gang's nodes."""
+    cl = ClusterState(2)
+    gauges = TenantGauges()
+    s = TriplesScheduler(cl, tenancy=Tenancy.create(gauges=gauges))
+    nodes_seen = {}
+
+    def fn(tag):
+        def f(ctx):
+            nodes_seen.setdefault(tag, set()).add(ctx.node)
+            return (tag, ctx.task_id)
+        return f
+
+    # big gang: 2 nodes × 2 slots, 6 tasks -> two slots drain early
+    ja = s.submit("alice", [Task(id=i, fn=fn("big")) for i in range(6)],
+                  T.Triples(2, 2, 1))
+    js = s.submit("alice", [Task(id=i, fn=fn("small")) for i in range(2)],
+                  T.Triples(1, 2, 1))
+    jb = s.submit("bob", [Task(id=i, fn=fn("bob")) for i in range(2)],
+                  T.Triples(1, 2, 1))
+    done = s.run_queued()
+    assert set(done) == {ja.id, js.id, jb.id}
+    assert any(e.kind == "lane_backfill" for e in s.events)
+    assert done[js.id].results == {0: ("small", 0), 1: ("small", 1)}
+    assert done[ja.id].results == {i: ("big", i) for i in range(6)}
+    # the small job ran inside alice's gang footprint
+    assert nodes_seen["small"] <= nodes_seen["big"]
+    assert all(v is None for v in cl.owner.values())
+    # a lane-backfilled job holds zero nodes in the gauges
+    assert gauges.gauge("alice").nodes_held == 0
+    assert gauges.gauge("alice").jobs_done == 2
+
+
+def test_adopt_honours_granted_lane_share():
+    """Regression: adopt() used to spread tasks over ALL free slots,
+    so the second of two same-round lane-backfill grants on one gang
+    found no free slot and crashed. With the lane cap, co-granted jobs
+    occupy disjoint lane shares."""
+    from repro.core.scheduler import _GangRun
+    cl = ClusterState(2)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create())
+    run = _GangRun(s, "u", [Task(id=i, fn=lambda ctx: 1) for i in range(4)],
+                   T.Triples(2, 4, 1), nodes=[0, 1])
+    assert run.free_slot_count() == 4   # 8 slots, 4 tasks round-robin
+    k1 = run.adopt([Task(id=i, fn=lambda ctx: 1) for i in range(4)],
+                   lanes=2)
+    assert run.free_slot_count() == 2   # confined to its 2-lane grant
+    k2 = run.adopt([Task(id=i, fn=lambda ctx: 1) for i in range(3)],
+                   lanes=2)             # second grant still has lanes
+    assert run.free_slot_count() == 0
+    lanes_of = {}
+    for slot, q in run.queues.items():
+        for jobk, tid in q:
+            lanes_of.setdefault(jobk, set()).add((slot.node, slot.slot))
+    assert len(lanes_of[k1]) == 2 and len(lanes_of[k2]) == 2
+    assert not lanes_of[k1] & lanes_of[k2]
+
+
+def test_lane_backfill_never_crosses_users():
+    """bob's queued job must NOT adopt alice's free lanes even when they
+    are the only capacity available (whole-node isolation)."""
+    cl = ClusterState(1)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create())
+    ja = s.submit("alice", [Task(id=i, fn=lambda ctx: "a") for i in range(2)],
+                  T.Triples(1, 4, 1))   # 4 slots, 2 tasks: 2 lanes free
+    jb = s.submit("bob", [Task(id=i, fn=lambda ctx: "b") for i in range(2)],
+                  T.Triples(1, 2, 1))
+    done = s.run_queued()
+    # bob ran only after alice released the node, never via her lanes
+    assert not any(e.kind == "lane_backfill" for e in s.events)
+    assert not done[ja.id].failed and not done[jb.id].failed
+    assert done[jb.id].wait_rounds > 0
+
+
+def test_lane_backfill_memory_admission_veto():
+    """Adoption is refused when host + adopted lanes would overflow the
+    per-chip footprint budget."""
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    cl = ClusterState(2, spec)
+    s = TriplesScheduler(cl, tenancy=Tenancy.create(node_spec=spec))
+    # host: pack 2 at 4 GB/lane (cap is 3 lanes/chip at 0.9 headroom)
+    ja = s.submit("u", [Task(id=i, fn=lambda ctx: 1) for i in range(4)],
+                  T.Triples(2, 8, 1), bytes_per_lane=4e9)
+    # small job alone packs 2/chip: combined 4 > cap 3 -> no adoption
+    js = s.submit("u", [Task(id=i, fn=lambda ctx: 1) for i in range(2)],
+                  T.Triples(1, 8, 1), bytes_per_lane=4e9)
+    done = s.run_queued()
+    assert not any(e.kind == "lane_backfill" for e in s.events)
+    assert not done[ja.id].failed and not done[js.id].failed
+
+
+def test_sim_lane_refill_cuts_waits_without_extending_allocations():
+    jobs = S.mixed_workload(n_sweep_jobs=10, sweep_tasks=88,
+                            inter_arrival_s=8.0, n_train_jobs=2,
+                            train_nodes=3, n_serve_jobs=6, n_eval_jobs=8)
+    base = S.simulate(jobs, 4, mode="shared")
+    refill = S.simulate(jobs, 4, mode="shared", lane_refill=True)
+    assert refill.lane_backfills > 0
+    assert refill.mean_wait() < base.mean_wait()
+    assert refill.makespan <= base.makespan + 1e-9
+    # adopted jobs consumed zero fresh nodes: every adopted stat rides a
+    # host whose user matches (same-user lanes only)
+    by_id = {j.id: j for j in jobs}
+    for st in refill.stats:
+        if st.adopted:
+            assert by_id[st.job.id].user == st.job.user
+
+
+def test_sim_lane_refill_deterministic():
+    jobs = S.mixed_workload(n_sweep_jobs=6, sweep_tasks=40,
+                            inter_arrival_s=6.0, n_eval_jobs=4)
+    a = S.simulate(jobs, 4, mode="shared", lane_refill=True)
+    b = S.simulate(jobs, 4, mode="shared", lane_refill=True)
+    assert [(s.job.id, s.start_t, s.end_t, s.adopted) for s in a.stats] == \
+           [(s.job.id, s.start_t, s.end_t, s.adopted) for s in b.stats]
 
 
 # ---------------------------------------------------------------------------
