@@ -1,2 +1,2 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
-    save_checkpoint, load_checkpoint, latest_step, Checkpointer)
+    save_checkpoint, load_checkpoint, load_extra, latest_step, Checkpointer)

@@ -65,6 +65,22 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_extra(directory: str,
+               step: Optional[int] = None) -> Tuple[dict, int]:
+    """Read ONLY the manifest's ``extra`` dict (and the resolved step) —
+    no array loads. Pool snapshots store their lane cursors here, and the
+    loader must read them BEFORE it can build the ``like`` template for
+    load_checkpoint (the number of in-flight lanes is part of the extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest.get("extra", {}), step
+
+
 def load_checkpoint(directory: str, like: Any,
                     step: Optional[int] = None) -> Tuple[Any, int, dict]:
     """Restore into the structure of ``like`` (its treedef defines order).

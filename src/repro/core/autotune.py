@@ -65,9 +65,21 @@ def auto_nppn(make_packed: Callable[[int], Callable],
             hi = k
             break
     if hi is None:
-        return PackingDecision(min(lo, max_factor), lo_prof,
-                               reason="hit max_factor, all fit",
-                               profile_single=prof1)
+        # The doubling loop stopped because 2*lo > max_factor, so every
+        # factor in (lo, max_factor] is still UNPROBED — returning lo here
+        # silently packs at the last power of two (e.g. 4 when max_factor
+        # is an admission-derived 6). Probe max_factor itself: if it fits
+        # the frontier is exactly the cap; otherwise bisect (lo, max_factor).
+        if lo >= max_factor:
+            return PackingDecision(max_factor, lo_prof,
+                                   reason="hit max_factor, all fit",
+                                   profile_single=prof1)
+        prof = measure_packed(make_packed, max_factor, example_args_fn)
+        if prof.fits(hbm_budget, headroom):
+            return PackingDecision(max_factor, prof,
+                                   reason="hit max_factor, all fit",
+                                   profile_single=prof1)
+        hi = max_factor
 
     # bisect (lo fits, hi doesn't)
     while hi - lo > 1:

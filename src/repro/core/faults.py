@@ -35,9 +35,13 @@ class FaultPolicy:
     max_retries: int = 2                # per task, for TaskCrash
     oom_backoff: bool = True            # halve packing factor on TaskOOM
     min_pack_factor: int = 1
-    speculative_stragglers: bool = True # duplicate slowest lane when idle slot
-    straggler_ratio: float = 1.5
-    checkpoint_every: int = 0           # steps; 0 = only on completion
+    speculative_stragglers: bool = True # duplicate a straggling lane onto a
+                                        # free pool slot, first-result-wins
+                                        # (lanepool.RefillExecutor)
+    straggler_ratio: float = 1.5        # EWMA step time vs median (monitor)
+    checkpoint_every: int = 0           # steps (sweep per-task saves) and
+                                        # rounds (scheduler gang cursors);
+                                        # 0 = only on completion/preempt
 
 
 def inject_failures(fn: Callable, *, fail_on_calls=(), oom_on_calls=(),

@@ -19,6 +19,21 @@ node level. This module closes it at the LANE level:
     max over lanes of the work that lane happened to carry, not
     waves × max(task length) (benchmarks/bench_lane_refill.py).
 
+  * ``PoolSnapshot`` — preemption support (DESIGN.md §8): the executor
+    can DRAIN mid-run (``should_preempt`` / ``request_preempt``) into a
+    snapshot of per-lane pytree states + task cursors, persistable via
+    checkpoint/Checkpointer, and ``rehydrate`` resumes the same work on a
+    pool of a DIFFERENT capacity — lanes are independent under vmap and
+    batches are keyed by (task, step), so a preempted 8-lane run resumed
+    on 4 lanes produces bit-identical per-task results.
+
+  * speculative straggler re-execution (``FaultPolicy.
+    speculative_stragglers``): when the queue has drained and free lanes
+    remain, a lane flagged by ``stragglers_fn`` (RunMonitor.stragglers)
+    is DUPLICATED onto a free slot — twin lanes advance the same task
+    from the same state, first result wins, the loser is cancelled
+    without a second ``on_finish``.
+
 Semantics guarantee (tested): a task that detaches and re-attaches on
 another lane produces bit-identical losses to an uninterrupted run —
 masked inactive lanes pass their state through untouched, and lanes are
@@ -37,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpointer as ck
 from repro.core import packing
 
 
@@ -140,12 +156,108 @@ class LanePool:
 
 
 @dataclasses.dataclass
+class LaneRecord:
+    """One in-flight lane at drain time: state + cursor."""
+    task_id: int
+    step_done: int
+    params: Any
+    opt_state: Any
+    hparams: Any
+
+
+@dataclasses.dataclass
+class PoolSnapshot:
+    """A drained pool: per-lane pytree states + task cursors.
+
+    ``capacity`` records where the pool was when it drained; ``rehydrate``
+    may resume on any capacity — the snapshot is capacity-agnostic because
+    lane state is per-task, not per-slot. ``queued`` preserves the task
+    ids that never attached (their cursor is implicit: step 0 or whatever
+    their own init_fn restores).
+    """
+    capacity: int
+    lanes: List[LaneRecord]
+    queued: List[int]
+
+    def save(self, directory: str, step: int = 0) -> str:
+        """Persist via the atomic checkpoint layout: one stacked pytree of
+        the in-flight lane states, cursors in the manifest's extra."""
+        if self.lanes:
+            tree = {"params": packing.stack_trees(
+                        [r.params for r in self.lanes]),
+                    "opt_state": packing.stack_trees(
+                        [r.opt_state for r in self.lanes]),
+                    "hparams": packing.stack_trees(
+                        [r.hparams for r in self.lanes])}
+        else:
+            tree = {}
+        extra = {"pool_snapshot": True, "capacity": self.capacity,
+                 "task_ids": [r.task_id for r in self.lanes],
+                 "steps_done": [r.step_done for r in self.lanes],
+                 "queued": list(self.queued)}
+        return ck.save_checkpoint(directory, tree, step, extra)
+
+    @classmethod
+    def load(cls, directory: str, template_params: Any, template_opt: Any,
+             template_hparams: Any, step: int = None) -> "PoolSnapshot":
+        """Restore from disk. Templates supply the per-lane pytree
+        structure (the same ones a LanePool is built from)."""
+        extra, step = ck.load_extra(directory, step)
+        if not extra.get("pool_snapshot"):
+            raise ValueError(f"{directory} is not a PoolSnapshot checkpoint")
+        n = len(extra["task_ids"])
+        if n:
+            like = {"params": packing.stack_trees([template_params] * n),
+                    "opt_state": packing.stack_trees([template_opt] * n),
+                    "hparams": packing.stack_trees([template_hparams] * n)}
+            tree, _, _ = ck.load_checkpoint(directory, like, step)
+            lanes = [LaneRecord(
+                task_id=tid, step_done=done,
+                params=packing.tree_get_lane(tree["params"], i),
+                opt_state=packing.tree_get_lane(tree["opt_state"], i),
+                hparams=packing.tree_get_lane(tree["hparams"], i))
+                for i, (tid, done) in enumerate(
+                    zip(extra["task_ids"], extra["steps_done"]))]
+        else:
+            lanes = []
+        return cls(capacity=int(extra["capacity"]), lanes=lanes,
+                   queued=[int(i) for i in extra["queued"]])
+
+
+def rehydrate(snapshot: PoolSnapshot,
+              tasks: Sequence[LaneTask]) -> List[LaneTask]:
+    """Rebuild the executor queue from a snapshot: in-flight tasks resume
+    from their saved state and cursor, never-attached tasks keep their own
+    init path. ``tasks`` must contain a LaneTask for every id the snapshot
+    references (finished tasks need not appear). The returned order is
+    deterministic: drained lanes first (in lane order), then the queued
+    tail — so a resume at ANY capacity assigns work deterministically."""
+    by_id = {t.id: t for t in tasks}
+    out: List[LaneTask] = []
+    for rec in snapshot.lanes:
+        t = by_id[rec.task_id]
+        t.step_done = rec.step_done
+        t.init_fn = (lambda rec=rec: (rec.params, rec.opt_state))
+        out.append(t)
+    out.extend(by_id[tid] for tid in snapshot.queued)
+    return out
+
+
+@dataclasses.dataclass
 class RefillStats:
     """What continuous refill did — the benchmark's raw material."""
     global_steps: int = 0               # pool.step() invocations
     lane_steps: int = 0                 # active lane-steps (useful work)
     attaches: int = 0
     n_traces: int = 0
+    preempted: bool = False             # run drained to a PoolSnapshot
+    spec_attaches: int = 0              # speculative twins launched
+    spec_wins: int = 0                  # twin delivered the result first
+    spec_cancelled: int = 0             # loser twins detached unfinished
+    spec_lane_steps: int = 0            # pool steps burned by twins —
+                                        # counted apart from lane_steps so
+                                        # useful-work/occupancy metrics
+                                        # never double-count a task
 
     @property
     def occupancy(self) -> float:
@@ -172,6 +284,27 @@ class RefillExecutor:
     With ``record_history`` (off by default — it grows with steps ×
     capacity), ``history`` records every (global_step, lane, task_id)
     occupancy so tests can verify no lane ever hosts two tasks at once.
+
+    Preemption (DESIGN.md §8): ``should_preempt(stats)`` is consulted
+    after every pool step (or call ``request_preempt()`` from a
+    callback); when it fires the executor detaches every lane into
+    ``self.snapshot`` (a PoolSnapshot), invokes ``on_preempt(task,
+    params, opt_state)`` per drained lane (the checkpoint seam), and
+    returns with ``stats.preempted`` set. ``rehydrate(snapshot, tasks)``
+    rebuilds a queue that resumes bit-identically on any capacity.
+
+    Speculative stragglers: with ``speculative`` set and a
+    ``stragglers_fn`` (e.g. RunMonitor.stragglers) naming suspect lanes,
+    a flagged lane's task is duplicated onto a free slot once the queue
+    has drained (never displacing queued work). The twin advances a COPY
+    of the lane's current state; first result wins, the loser is
+    cancelled — exactly one ``on_finish`` fires, and twin metrics are
+    suppressed so observers never double-count. Note the honest scope:
+    in a single-host lockstep pool both twins step in one compiled call,
+    so they tie and the primary wins by scan order — the mechanism (and
+    its bit-identical-twin guarantee) is the seam for pools whose lanes
+    live on different devices/hosts, where a straggling lane is a real
+    hardware condition and the duplicate genuinely finishes first.
     """
 
     def __init__(self, pool: LanePool, *,
@@ -182,6 +315,11 @@ class RefillExecutor:
                  checkpoint_every: int = 0,
                  on_checkpoint: Optional[Callable[[LaneTask, Any, Any],
                                                   None]] = None,
+                 should_preempt: Optional[Callable[[RefillStats], bool]] = None,
+                 on_preempt: Optional[Callable[[LaneTask, Any, Any],
+                                               None]] = None,
+                 speculative: bool = False,
+                 stragglers_fn: Optional[Callable[[], List[int]]] = None,
                  record_history: bool = False):
         self.pool = pool
         self.on_metrics = on_metrics
@@ -190,9 +328,23 @@ class RefillExecutor:
         self.on_step = on_step          # timing: (global, active, capacity)
         self.checkpoint_every = checkpoint_every
         self.on_checkpoint = on_checkpoint
+        self.should_preempt = should_preempt
+        self.on_preempt = on_preempt
+        self.speculative = speculative
+        self.stragglers_fn = stragglers_fn
         self.record_history = record_history
         self.history: List[Tuple[int, int, int]] = []
+        self.snapshot: Optional[PoolSnapshot] = None
+        self._preempt_requested = False
+        self._twin: Dict[int, int] = {}         # lane <-> twin lane
+        self._spec_lanes: set = set()           # lanes hosting a twin copy
+        self._speculated: set = set()           # task ids already twinned
         self._zero_batch: Any = None
+
+    def request_preempt(self):
+        """Drain to a PoolSnapshot after the current pool step (safe to
+        call from any callback)."""
+        self._preempt_requested = True
 
     def _refill(self, queue: deque, lane_task: List[Optional[LaneTask]],
                 stats: RefillStats):
@@ -223,6 +375,82 @@ class RefillExecutor:
         return packing.stack_trees([live.get(i, self._zero_batch)
                                     for i in range(len(lane_task))])
 
+    def _speculate(self, queue: deque, lane_task: List[Optional[LaneTask]],
+                   stats: RefillStats):
+        """Duplicate flagged straggler lanes onto free slots — only when
+        the queue has drained, so speculation never displaces real work."""
+        if queue or not self.speculative or self.stragglers_fn is None:
+            return
+        free = [l for l in self.pool.free_lanes()]
+        if not free:
+            return
+        for lane in self.stragglers_fn():
+            if not free:
+                break
+            t = lane_task[lane] if 0 <= lane < len(lane_task) else None
+            if (t is None or t.id in self._speculated
+                    or lane in self._spec_lanes or lane in self._twin):
+                continue
+            twin = dataclasses.replace(t)       # own cursor, same id
+            fl = free.pop(0)
+            self.pool.attach(
+                fl, t.id,
+                packing.tree_get_lane(self.pool.params, lane),
+                packing.tree_get_lane(self.pool.opt_state, lane),
+                t.hparams)
+            lane_task[fl] = twin
+            self._twin[lane] = fl
+            self._twin[fl] = lane
+            self._spec_lanes.add(fl)
+            self._speculated.add(t.id)
+            stats.spec_attaches += 1
+
+    def _cancel_twin(self, lane: int, lane_task: List[Optional[LaneTask]],
+                     stats: RefillStats) -> bool:
+        """Winner on ``lane``: drop its twin without on_finish. Returns
+        True when the winner was the speculative copy."""
+        other = self._twin.pop(lane, None)
+        if other is None:
+            return False
+        self._twin.pop(other, None)
+        if lane_task[other] is not None:
+            self.pool.detach(other)
+            lane_task[other] = None
+            stats.spec_cancelled += 1
+        won_spec = lane in self._spec_lanes
+        if won_spec:
+            stats.spec_wins += 1
+        self._spec_lanes.discard(lane)
+        self._spec_lanes.discard(other)
+        return won_spec
+
+    def _drain(self, queue: deque, lane_task: List[Optional[LaneTask]],
+               stats: RefillStats) -> PoolSnapshot:
+        """Detach every lane into a PoolSnapshot (speculative twins are
+        discarded — the primary copy carries the canonical state)."""
+        lanes: List[LaneRecord] = []
+        for lane, t in enumerate(lane_task):
+            if t is None:
+                continue
+            if lane in self._spec_lanes:        # twin: primary survives
+                self.pool.detach(lane)
+                lane_task[lane] = None
+                stats.spec_cancelled += 1
+                continue
+            params, opt_state = self.pool.detach(lane)
+            lane_task[lane] = None
+            if self.on_preempt is not None:
+                self.on_preempt(t, params, opt_state)
+            lanes.append(LaneRecord(task_id=t.id, step_done=t.step_done,
+                                    params=params, opt_state=opt_state,
+                                    hparams=t.hparams))
+        self._twin.clear()
+        self._spec_lanes.clear()
+        queued = [t.id for t in queue]
+        queue.clear()
+        return PoolSnapshot(capacity=self.pool.capacity, lanes=lanes,
+                            queued=queued)
+
     def run(self, tasks: Sequence[LaneTask]) -> RefillStats:
         queue = deque(tasks)
         pool = self.pool
@@ -230,6 +458,7 @@ class RefillExecutor:
         stats = RefillStats()
         while queue or any(t is not None for t in lane_task):
             self._refill(queue, lane_task, stats)
+            self._speculate(queue, lane_task, stats)
             if self._zero_batch is None and all(
                     t is None for t in lane_task):
                 break                   # nothing attachable (empty task set)
@@ -241,16 +470,31 @@ class RefillExecutor:
             if self.on_step_start is not None:
                 self.on_step_start()
             metrics = pool.step(batch)
-            n_active = sum(1 for t in lane_task if t is not None)
-            stats.lane_steps += n_active
-            if self.on_step is not None:
-                self.on_step(stats.global_steps, n_active, pool.capacity)
+            n_attached = sum(1 for t in lane_task if t is not None)
+            n_twin = sum(1 for l in self._spec_lanes
+                         if lane_task[l] is not None)
+            stats.lane_steps += n_attached - n_twin
+            stats.spec_lane_steps += n_twin
+            if self.on_step is not None:    # occupancy counts twins: they
+                self.on_step(stats.global_steps,   # really hold lanes
+                             n_attached, pool.capacity)
             stats.global_steps += 1
-            for lane, t in enumerate(lane_task):
+            # retire primaries BEFORE speculative twins: when both hit
+            # budget in the same pass (always, in a lockstep pool) the
+            # primary must deliver the final on_metrics/on_finish and
+            # cancel the twin — a twin winning a scan-order tie would
+            # silently swallow the task's last metrics sample
+            order = [l for l in range(len(lane_task))
+                     if l not in self._spec_lanes]
+            order += [l for l in range(len(lane_task))
+                      if l in self._spec_lanes]
+            for lane in order:
+                t = lane_task[lane]
                 if t is None:
                     continue
+                is_twin = lane in self._spec_lanes
                 stop = False
-                if self.on_metrics is not None:
+                if self.on_metrics is not None and not is_twin:
                     lm = packing.lane_slice(metrics, lane)
                     stop = bool(self.on_metrics(t, t.step_done, lm))
                 t.step_done += 1
@@ -259,14 +503,23 @@ class RefillExecutor:
                 if t.step_done >= t.steps or stop:
                     params, opt_state = pool.detach(lane)
                     lane_task[lane] = None
+                    self._cancel_twin(lane, lane_task, stats)
                     if self.on_finish is not None:
                         self.on_finish(t, params, opt_state)
                 elif (self.checkpoint_every
                       and self.on_checkpoint is not None
+                      and not is_twin
                       and t.step_done % self.checkpoint_every == 0):
                     self.on_checkpoint(
                         t, packing.tree_get_lane(pool.params, lane),
                         packing.tree_get_lane(pool.opt_state, lane))
+            if self._preempt_requested or (
+                    self.should_preempt is not None
+                    and self.should_preempt(stats)):
+                self._preempt_requested = False
+                self.snapshot = self._drain(queue, lane_task, stats)
+                stats.preempted = True
+                break
         stats.n_traces = pool.n_traces
         return stats
 

@@ -2,51 +2,90 @@
 triples placement, then reduce.
 
 Two execution paths:
-  * packed  — homogeneous pure-JAX map_fn: items are stacked on a lane
-    axis and executed as ONE vmapped program per pack group (the GPU-sharing
-    fast path; used by parametric sweeps).
+  * packed  — homogeneous pure-JAX map_fn: items become lanes of a
+    persistent lane pool (core/lanepool.py) sized to the concurrency the
+    triples allow. The pool is compiled ONCE and refilled continuously, so
+    a ragged last group never pads: lanes past the end of the item list
+    are simply masked inactive instead of re-running a duplicated item
+    (the pre-lane-pool wave loop burned a full wave of steps on padding).
   * slotted — arbitrary Python tasks through the TriplesScheduler (keeps
     the paper's semantics for heterogeneous work).
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import packing, triples as T
+from repro.core import triples as T
+from repro.core.lanepool import LanePool, LaneTask, RefillExecutor, RefillStats
 from repro.core.scheduler import ClusterState, Task, TriplesScheduler
+
+
+def _run_packed(map_fn: Callable, items: Sequence[Any],
+                wave: int) -> Tuple[List[Any], RefillStats]:
+    """Map over ``items`` as single-step lane tasks of one masked pool.
+
+    The pool state is a dummy scalar per lane (map_fn is stateless); each
+    item occupies a lane for exactly one masked step and the lane refills
+    with the next item. Capacity never exceeds the item count, and the
+    final partial step masks the empty lanes — no padded duplicates, no
+    wasted lane-steps (stats.lane_steps == len(items))."""
+    zero = jnp.zeros(())
+
+    def step(params, opt_state, batch, hparams):
+        return params, opt_state, {"out": map_fn(batch)}
+
+    pool = LanePool(min(wave, len(items)), step,
+                    template_params=zero, template_opt=zero,
+                    template_hparams=zero)
+    results: Dict[int, Any] = {}
+
+    def on_metrics(t: LaneTask, step_idx: int, lane_metrics) -> bool:
+        results[t.id] = lane_metrics["out"]
+        return False
+
+    tasks = [LaneTask(id=i, hparams=zero,
+                      init_fn=lambda: (zero, zero),
+                      batch_fn=lambda s, it=it: it, steps=1)
+             for i, it in enumerate(items)]
+    stats = RefillExecutor(pool, on_metrics=on_metrics).run(tasks)
+    return [results[i] for i in range(len(items))], stats
 
 
 def llmapreduce(map_fn: Callable, items: Sequence[Any], *,
                 reduce_fn: Optional[Callable] = None,
                 trip: Optional[T.Triples] = None,
                 node_spec: Optional[T.NodeSpec] = None,
-                mode: str = "packed") -> Any:
+                mode: str = "packed",
+                return_stats: bool = False) -> Any:
     """Apply map_fn to every item; optionally fold results with reduce_fn.
 
-    packed mode: map_fn must be jax-traceable over stacked item pytrees.
-    Items are processed in waves of ``total_slots`` lanes (the concurrency
-    the triples allow), mirroring how LLMapReduce queues tasks per slot.
+    packed mode: map_fn must be jax-traceable over stacked item pytrees;
+    items run as lanes of a continuously-refilled pool whose capacity is
+    ``trip.total_slots`` (the concurrency the triples allow).
+
+    Empty ``items``: returns ``[]`` when there is nothing to fold; with a
+    ``reduce_fn`` there is no identity element to seed the fold, so a
+    ValueError is raised instead of the old IndexError from deep inside
+    the padding path.
+
+    ``return_stats`` (packed mode only) additionally returns the pool's
+    RefillStats — ``lane_steps`` equals ``len(items)`` exactly.
     """
+    if len(items) == 0:
+        if reduce_fn is not None:
+            raise ValueError(
+                "llmapreduce: cannot reduce empty items (no identity "
+                "element); pass reduce_fn=None to get [] back")
+        return ([], RefillStats()) if (return_stats and mode == "packed") \
+            else []
     trip = trip or T.Triples(1, max(1, len(items)), 1)
     node_spec = node_spec or T.NodeSpec()
 
+    stats: Optional[RefillStats] = None
     if mode == "packed":
-        results: List[Any] = []
-        wave = trip.total_slots
-        vfn = jax.jit(jax.vmap(map_fn))
-        for start in range(0, len(items), wave):
-            chunk = list(items[start:start + wave])
-            n = len(chunk)
-            if n < wave:  # pad the last wave, drop padded outputs
-                chunk = chunk + [chunk[-1]] * (wave - n)
-            stacked = packing.stack_trees(chunk)
-            out = vfn(stacked)
-            outs = packing.unstack_tree(out, wave)[:n]
-            results.extend(outs)
+        results, stats = _run_packed(map_fn, items, trip.total_slots)
     elif mode == "slotted":
         cluster = ClusterState(trip.nnode, node_spec)
         sched = TriplesScheduler(cluster)
@@ -60,8 +99,11 @@ def llmapreduce(map_fn: Callable, items: Sequence[Any], *,
         raise ValueError(mode)
 
     if reduce_fn is None:
-        return results
-    acc = results[0]
-    for r in results[1:]:
-        acc = reduce_fn(acc, r)
-    return acc
+        out = results
+    else:
+        out = results[0]
+        for r in results[1:]:
+            out = reduce_fn(out, r)
+    if return_stats and mode == "packed":
+        return out, stats
+    return out

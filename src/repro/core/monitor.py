@@ -141,6 +141,8 @@ class TenantGauge:
     node_time: float = 0.0              # accumulated node-seconds/rounds
     jobs_done: int = 0
     jobs_rejected: int = 0
+    jobs_preempted: int = 0             # gangs checkpointed off their nodes
+    jobs_resumed: int = 0               # preempted gangs re-dispatched
     waits: List[float] = dataclasses.field(default_factory=list)
 
 
@@ -223,12 +225,18 @@ class TenantGauges:
         return "\n".join(lines)
 
     def on_dispatch(self, user: str, nodes: int, lanes: int = 0,
-                    resident_bytes: int = 0, wait: float = 0.0):
+                    resident_bytes: int = 0,
+                    wait: Optional[float] = None):
+        """``wait`` is sampled into the tenant's wait distribution only
+        when given — a preempted gang's RESUME dispatch must not add a
+        second partial sample for a job that already recorded its queue
+        wait at first dispatch."""
         g = self.gauge(user)
         g.nodes_held += nodes
         g.lanes += lanes
         g.resident_bytes += resident_bytes
-        g.waits.append(wait)
+        if wait is not None:
+            g.waits.append(wait)
 
     def on_release(self, user: str, nodes: int, node_time: float,
                    lanes: int = 0, resident_bytes: int = 0,
@@ -246,18 +254,63 @@ class TenantGauges:
     def on_reject(self, user: str):
         self.gauge(user).jobs_rejected += 1
 
+    def on_preempt(self, user: str, nodes: int, node_time: float,
+                   lanes: int = 0, resident_bytes: int = 0):
+        """A gang was checkpointed off its nodes: release the holdings,
+        bill the held time, count the preemption (NOT a completion)."""
+        g = self.gauge(user)
+        g.nodes_held = max(0, g.nodes_held - nodes)
+        g.lanes = max(0, g.lanes - lanes)
+        g.resident_bytes = max(0, g.resident_bytes - resident_bytes)
+        g.node_time += node_time
+        g.jobs_preempted += 1
+
+    def on_resume(self, user: str):
+        """A preempted gang re-dispatched (its on_dispatch carries the
+        granted — possibly elastically narrowed — holdings)."""
+        self.gauge(user).jobs_resumed += 1
+
+    # ------------------------------------------------- wait distributions
+    #: bucket upper bounds (rounds/seconds); the last bucket is open-ended
+    WAIT_BINS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+
+    def wait_histogram(self, user: str,
+                       bins: Optional[tuple] = None) -> List[int]:
+        """Per-tenant queue-wait histogram: counts per bucket of
+        ``bins + (inf,)``. The preemption benchmark reads the small-job
+        tail off this (does preemption move waits out of the top bucket)."""
+        edges = list(bins if bins is not None else self.WAIT_BINS)
+        counts = [0] * (len(edges) + 1)
+        for w in self.gauge(user).waits:
+            for i, e in enumerate(edges):
+                if w <= e:
+                    counts[i] += 1
+                    break
+            else:
+                counts[-1] += 1
+        return counts
+
+    def wait_quantile(self, user: str, q: float) -> float:
+        """Empirical wait quantile (q in [0, 1]) for one tenant."""
+        ws = sorted(self.gauge(user).waits)
+        if not ws:
+            return 0.0
+        idx = min(len(ws) - 1, max(0, int(round(q * (len(ws) - 1)))))
+        return ws[idx]
+
     def table(self) -> str:
         """Render the per-tenant LLload-style snapshot."""
         lines = [f"{'TENANT':12s} {'NODES':>5s} {'LANES':>5s} "
                  f"{'HBM-USED':>10s} {'NODE-TIME':>10s} {'DONE':>4s} "
-                 f"{'REJ':>3s} {'MEAN-WAIT':>9s}"]
+                 f"{'REJ':>3s} {'PRE':>3s} {'RES':>3s} {'MEAN-WAIT':>9s}"]
         for user in sorted(self._g):
             g = self._g[user]
             mw = sum(g.waits) / len(g.waits) if g.waits else 0.0
             lines.append(
                 f"{user:12s} {g.nodes_held:>5d} {g.lanes:>5d} "
                 f"{g.resident_bytes/1e9:>8.1f}GB {g.node_time:>10.1f} "
-                f"{g.jobs_done:>4d} {g.jobs_rejected:>3d} {mw:>9.1f}")
+                f"{g.jobs_done:>4d} {g.jobs_rejected:>3d} "
+                f"{g.jobs_preempted:>3d} {g.jobs_resumed:>3d} {mw:>9.1f}")
         return "\n".join(lines)
 
 

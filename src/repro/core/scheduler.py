@@ -72,6 +72,8 @@ class JobResult:
     alloc_cycles: int                  # scheduler allocations performed
     wall_s: float
     wait_rounds: int = 0               # rounds spent queued (tenancy path)
+    preemptions: int = 0               # times this gang was checkpointed
+                                       # off its nodes mid-run
 
 
 class ClusterState:
@@ -127,6 +129,36 @@ class ClusterState:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class GangCheckpoint:
+    """Everything a preempted gang needs to resume — at ANY width.
+
+    Results/failed are the completed tasks' outcomes; ``remaining`` the
+    task-id cursors still to run (including tasks mid-retry). The resumed
+    gang replans ``remaining`` over whatever nodes it is granted
+    (``min_nodes`` elastic resize), so the checkpoint is width-agnostic —
+    exactly like a PoolSnapshot is capacity-agnostic at the lane level.
+    """
+    job_id: int
+    user: str
+    results: Dict[int, Any]
+    failed: Dict[int, str]
+    remaining: List[int]
+    retries: Dict[int, int]
+    nnode: int                          # width held at preemption
+
+    def cursor_extra(self) -> dict:
+        """JSON-safe cursor view for the persisted artifact (values of
+        arbitrary Python results stay in memory; the artifact records
+        which tasks are done so operators can audit progress)."""
+        return {"gang_checkpoint": True, "job": self.job_id,
+                "user": self.user, "nnode": self.nnode,
+                "completed": sorted(self.results),
+                "failed": {str(k): v for k, v in self.failed.items()},
+                "remaining": list(self.remaining),
+                "retries": {str(k): v for k, v in self.retries.items()}}
+
+
+@dataclasses.dataclass
 class GangJob:
     """One submitted triples job under tenancy."""
     id: int
@@ -137,6 +169,8 @@ class GangJob:
     state: str = "queued"              # queued|running|done|rejected
     reject_reason: str = ""
     result: Optional[JobResult] = None
+    checkpoint: Optional[GangCheckpoint] = None   # set while preempted
+    preemptions: int = 0
 
 
 class _GangRun:
@@ -154,7 +188,8 @@ class _GangRun:
     """
 
     def __init__(self, sched: "TriplesScheduler", user: str,
-                 tasks: List[Task], trip: T.Triples, nodes: List[int]):
+                 tasks: List[Task], trip: T.Triples, nodes: List[int],
+                 checkpoint: Optional[GangCheckpoint] = None):
         self.sched = sched
         self.user = user
         self.trip = trip
@@ -175,6 +210,11 @@ class _GangRun:
         self.queues: Dict[T.SlotAssignment, List[Tuple[int, int]]] = {
             s: [(0, ids[i]) for i in s.task_ids] for s in plan.slots}
         self.pending_retry: List[Tuple[int, int]] = []
+        if checkpoint is not None:      # resume: pre-seed completed work
+            for tid, v in checkpoint.results.items():
+                self.results[(0, tid)] = v
+            for tid, err in checkpoint.failed.items():
+                self.failed[(0, tid)] = err
 
     @property
     def finished(self) -> bool:
@@ -273,6 +313,23 @@ class _GangRun:
         self.queues = {s: [remap[i] for i in s.task_ids]
                        for s in replanned.slots}
 
+    # ---------------------------------------------------------- preemption
+    def checkpoint(self, job_id: int) -> GangCheckpoint:
+        """Snapshot job 0's progress cursors for preemption. Adopted jobs
+        must have drained first (victim selection guarantees it)."""
+        remaining = sorted(
+            {k[1] for q in self.queues.values() for k in q if k[0] == 0}
+            | {k[1] for k in self.pending_retry if k[0] == 0})
+        return GangCheckpoint(
+            job_id=job_id, user=self.user,
+            results={k[1]: v for k, v in self.results.items()
+                     if k[0] == 0},
+            failed={k[1]: v for k, v in self.failed.items() if k[0] == 0},
+            remaining=remaining,
+            retries={tid: self.by_key[(0, tid)].retries
+                     for tid in remaining},
+            nnode=len(self.nodes))
+
     # ------------------------------------------------------------- results
     def job_result(self, jobk: int, alloc_cycles: int,
                    wait_rounds: int = 0) -> JobResult:
@@ -307,39 +364,92 @@ class Tenancy:
     queue: ten.JobQueue
     admission: Optional[ten.MemoryAdmission] = None
     gauges: Optional["TenantGauges"] = None    # core.monitor.TenantGauges
+    preemption: Optional[ten.PreemptionPolicy] = None
 
     @classmethod
     def create(cls, quotas: Optional[Dict[str, ten.TenantQuota]] = None,
                node_spec: Optional[T.NodeSpec] = None,
                admission_headroom: float = 0.9,
                half_life: Optional[float] = None,
-               gauges: Optional["TenantGauges"] = None) -> "Tenancy":
+               gauges: Optional["TenantGauges"] = None,
+               preemption: Optional[ten.PreemptionPolicy] = None
+               ) -> "Tenancy":
         acct = ten.FairShareAccountant(quotas, half_life=half_life)
         adm = ten.MemoryAdmission(node_spec, headroom=admission_headroom) \
             if node_spec is not None else ten.MemoryAdmission(
                 headroom=admission_headroom)
-        return cls(queue=ten.JobQueue(acct), admission=adm, gauges=gauges)
+        return cls(queue=ten.JobQueue(acct), admission=adm, gauges=gauges,
+                   preemption=preemption)
 
     @property
     def accountant(self) -> ten.FairShareAccountant:
         return self.queue.accountant
 
 
+@dataclasses.dataclass
+class _RQState:
+    """Live state of one ``run_queued`` drain — the explicit contract
+    between the round loop and ``preempt()``/``_maybe_preempt()``."""
+    runs: Dict[int, "_GangRun"] = dataclasses.field(default_factory=dict)
+    hosts: Dict[int, GangJob] = dataclasses.field(default_factory=dict)
+    placed: Dict[int, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)              # job id -> (run id, jobk)
+    active_jobs: Dict[int, GangJob] = dataclasses.field(
+        default_factory=dict)
+    dispatch_round: Dict[int, int] = dataclasses.field(
+        default_factory=dict)              # latest (re)dispatch: charging
+    first_dispatch: Dict[int, int] = dataclasses.field(
+        default_factory=dict)              # first dispatch: wait anchor
+                                           # (matches the simulator's
+                                           # SimJobStats.start_t)
+    submit_round: Dict[int, int] = dataclasses.field(
+        default_factory=dict)              # original submission round
+    queued_since: Dict[int, int] = dataclasses.field(
+        default_factory=dict)              # starvation clock — reset when
+                                           # a preempted job requeues so a
+                                           # fresh victim can't look
+                                           # instantly starved itself
+    charged_rounds: Dict[int, int] = dataclasses.field(
+        default_factory=dict)              # run id -> rounds charged
+    granted_lanes: Dict[int, int] = dataclasses.field(
+        default_factory=dict)              # job id -> lanes gauged
+    rnd: int = 0
+    in_execution: bool = False             # inside the step_round phase —
+                                           # preempt() must refuse (it
+                                           # mutates runs mid-iteration)
+
+
 class TriplesScheduler:
     def __init__(self, cluster: ClusterState,
                  policy: Optional[FaultPolicy] = None,
-                 tenancy: Optional[Tenancy] = None):
+                 tenancy: Optional[Tenancy] = None,
+                 checkpoint_dir: Optional[str] = None):
         self.cluster = cluster
         self.policy = policy or FaultPolicy()
         self.tenancy = tenancy
+        self.checkpoint_dir = checkpoint_dir
         self.events: List[Event] = []
         self._alloc_cycles = 0
         self._jobs: Dict[int, GangJob] = {}
         self._next_job_id = 0
+        self._rq: Optional[_RQState] = None      # live run_queued state
+        self._gang_cks: Dict[int, Any] = {}      # job id -> Checkpointer
 
     # ------------------------------------------------------------------ util
     def _log(self, kind: str, **detail):
         self.events.append(Event(time.perf_counter(), kind, detail))
+
+    def _persist_gang(self, job_id: int, ckpt: GangCheckpoint, rnd: int):
+        """Write the gang's progress cursors through the Checkpointer —
+        FaultPolicy.checkpoint_every honored on the scheduler path, the
+        same atomic step layout the sweep's per-task checkpoints use."""
+        if self.checkpoint_dir is None:
+            return
+        from repro.checkpoint import Checkpointer
+        if job_id not in self._gang_cks:
+            self._gang_cks[job_id] = Checkpointer(
+                f"{self.checkpoint_dir}/gang_{job_id}")
+        self._gang_cks[job_id].save({}, rnd, extra=ckpt.cursor_extra())
 
     # ------------------------------------------------------- triples submit
     def run_triples_job(self, user: str, tasks: List[Task],
@@ -435,6 +545,117 @@ class TriplesScheduler:
 
         return admit
 
+    # ----------------------------------------------------------- preemption
+    def preempt(self, run_id: int) -> GangCheckpoint:
+        """Checkpoint a running gang off its nodes and requeue it.
+
+        The gang's progress (results + remaining-task cursors) becomes a
+        GangCheckpoint on its GangJob; its whole-node allocation is
+        released immediately, the owner is charged for the rounds it
+        held, and the job re-enters the fair-share queue with an ELASTIC
+        width (``PreemptionPolicy.min_nodes``) so it can resume the
+        moment partial capacity frees — replanning the remaining tasks
+        over however many nodes it is granted. Only callable BETWEEN
+        phases of a ``run_queued`` round (the preemption policy drives
+        it) — never from inside a task closure, whose gang is mid
+        ``step_round`` over the very registry this mutates. A gang
+        currently hosting lane-backfilled jobs of other submissions
+        cannot be preempted — victim selection filters those out.
+        """
+        st = self._rq
+        if st is None or run_id not in st.runs:
+            raise RuntimeError(f"no active gang run {run_id} to preempt")
+        if st.in_execution:
+            raise RuntimeError(
+                "preempt() called from inside the execution phase (a task "
+                "closure?); preemption happens between rounds")
+        if any(st.placed[jid][0] == run_id and st.placed[jid][1] != 0
+               for jid in st.active_jobs):
+            raise RuntimeError(
+                f"gang {run_id} hosts lane-backfilled jobs; not preemptible")
+        tn = self.tenancy
+        run: _GangRun = st.runs.pop(run_id)
+        job: GangJob = st.hosts.pop(run_id)
+        rnd = st.rnd
+        ckpt = run.checkpoint(job.id)
+        job.checkpoint = ckpt
+        job.preemptions += 1
+        job.state = "queued"
+        # charge the victim for the rounds it actually EXECUTED —
+        # preemption runs before this round's execution phase, so round
+        # ``rnd`` never happens for this gang (the completion path's
+        # ``rnd + 1`` is right only because a finishing gang did step)
+        rounds_held = max(0, rnd - st.dispatch_round[job.id])
+        node_time = float(run.trip.nnode * rounds_held)
+        tn.accountant.charge(job.user, node_time)
+        st.charged_rounds.pop(run_id, None)
+        if tn.gauges is not None:
+            tn.gauges.on_preempt(
+                job.user, nodes=run.trip.nnode, node_time=node_time,
+                lanes=run.trip.nnode * job.trip.nppn,
+                resident_bytes=int(job.bytes_per_lane * run.trip.nnode
+                                   * job.trip.nppn))
+            tn.gauges.on_gang_done(f"gang:{run_id}")
+        self._persist_gang(job.id, ckpt, rnd)
+        run.release()
+        st.active_jobs.pop(job.id, None)
+        st.placed.pop(job.id, None)
+        pol = tn.preemption or ten.PreemptionPolicy()
+        est = math.ceil(len(ckpt.remaining) / job.trip.total_slots) \
+            if ckpt.remaining else 0
+        tn.queue.push(ten.PendingJob(
+            id=job.id, user=job.user, n_nodes=job.trip.nnode,
+            submit_seq=tn.queue.next_seq(), est_duration=float(est),
+            bytes_per_lane=job.bytes_per_lane, n_slots=job.trip.total_slots,
+            n_tasks=len(ckpt.remaining),
+            min_nodes=pol.min_nodes(job.trip.nnode), payload=job))
+        st.queued_since[job.id] = rnd
+        self._log("preempt", job=job.id, user=job.user,
+                  remaining=len(ckpt.remaining), done=len(ckpt.results),
+                  rounds_held=rounds_held)
+        return ckpt
+
+    def _maybe_preempt(self) -> bool:
+        """One preemption per round, driven by the fair-share policy: the
+        longest-waiting starved tenant may evict the cheapest over-share
+        victim (lowest remaining-work / over-share)."""
+        tn = self.tenancy
+        st = self._rq
+        pol = tn.preemption
+        if pol is None or not len(tn.queue):
+            return False
+        rnd = st.rnd
+        candidates = []
+        for rid, run in st.runs.items():
+            if rid not in st.active_jobs:
+                continue                # host done; gang drains adopted work
+            if any(st.placed[jid][0] == rid and st.placed[jid][1] != 0
+                   for jid in st.active_jobs):
+                continue                # hosting backfilled jobs: skip
+            candidates.append((rid, run.user,
+                               float(run.trip.nnode * run.remaining_rounds()),
+                               st.hosts[rid].preemptions))
+        if not candidates:
+            return False
+        # in-flight consumption: node-rounds held by each user's running
+        # gangs but not yet charged (the accountant bills at release)
+        accrued: Dict[str, float] = {}
+        for rid, run in st.runs.items():
+            held = run.trip.nnode * max(
+                1, rnd + 1 - st.dispatch_round.get(rid, rnd))
+            accrued[run.user] = accrued.get(run.user, 0.0) + float(held)
+        for pj in tn.queue.ordered():
+            waited = rnd - st.queued_since.get(
+                pj.id, st.submit_round.get(pj.id, 0))
+            if waited < pol.wait_threshold:
+                continue
+            victim = pol.choose_victim(tn.accountant, pj.user, candidates,
+                                       accrued=accrued)
+            if victim is not None:
+                self.preempt(victim)
+                return True
+        return False
+
     def run_queued(self) -> Dict[int, JobResult]:
         """Drain the pending queue, executing admitted gangs CONCURRENTLY.
 
@@ -450,17 +671,20 @@ class TriplesScheduler:
         tn = self.tenancy
         if tn is None:
             raise RuntimeError("run_queued() requires a Tenancy")
-        runs: Dict[int, _GangRun] = {}          # run id -> gang runtime
-        hosts: Dict[int, GangJob] = {}          # run id -> job 0
-        placed: Dict[int, Tuple[int, int]] = {} # job id -> (run id, jobk)
-        active_jobs: Dict[int, GangJob] = {}
-        granted_lanes: Dict[int, int] = {}      # job id -> lanes gauged
-        charged_rounds: Dict[int, int] = {}     # run id -> rounds charged
-        dispatch_round: Dict[int, int] = {}
-        submit_round: Dict[int, int] = {j.id: 0 for j in tn.queue.ordered()}
+        st = self._rq = _RQState(
+            submit_round={j.id: 0 for j in tn.queue.ordered()})
+        runs = st.runs                          # run id -> gang runtime
+        hosts = st.hosts                        # run id -> job 0
+        placed = st.placed                      # job id -> (run id, jobk)
+        active_jobs = st.active_jobs
+        granted_lanes = st.granted_lanes        # job id -> lanes gauged
+        charged_rounds = st.charged_rounds      # run id -> rounds charged
+        dispatch_round = st.dispatch_round
+        submit_round = st.submit_round
         done: Dict[int, JobResult] = {}
         rnd = 0
         while len(tn.queue) or active_jobs:
+            st.rnd = rnd
             # dispatch phase: whole-node allocations first
             running_view = [(run.trip.nnode, float(run.remaining_rounds()))
                             for run in runs.values()]
@@ -468,28 +692,50 @@ class TriplesScheduler:
                     self.cluster.free_count(), running_view,
                     held_by_user=self.cluster.held_counts()):
                 job: GangJob = pj.payload
-                nodes = self.cluster.allocate(job.user, job.trip.nnode,
-                                              fresh=True)
+                granted = pj.granted_nodes or job.trip.nnode
+                nodes = self.cluster.allocate(job.user, granted, fresh=True)
                 if nodes is None:       # race with node failure: requeue
                     tn.queue.push(pj)
                     continue
                 self._alloc_cycles += 1
-                self._log("alloc", user=job.user, nodes=nodes, job=job.id,
-                          triples=dataclasses.astuple(job.trip))
                 job.state = "running"
-                run = _GangRun(self, job.user, job.tasks, job.trip, nodes)
+                if job.checkpoint is not None:  # resume, possibly narrower
+                    ckpt = job.checkpoint
+                    trip_eff = dataclasses.replace(job.trip, nnode=granted)
+                    rem = {t.id for t in job.tasks} & set(ckpt.remaining)
+                    tasks = [t for t in job.tasks if t.id in rem]
+                    run = _GangRun(self, job.user, tasks, trip_eff, nodes,
+                                   checkpoint=ckpt)
+                    job.checkpoint = None
+                    self._log("resume", user=job.user, nodes=nodes,
+                              job=job.id, width=granted,
+                              full_width=job.trip.nnode,
+                              remaining=len(tasks))
+                    if tn.gauges is not None:
+                        tn.gauges.on_resume(job.user)
+                else:
+                    self._log("alloc", user=job.user, nodes=nodes,
+                              job=job.id,
+                              triples=dataclasses.astuple(job.trip))
+                    run = _GangRun(self, job.user, job.tasks, job.trip,
+                                   nodes)
                 runs[job.id] = run
                 hosts[job.id] = job
                 placed[job.id] = (job.id, 0)
                 active_jobs[job.id] = job
                 dispatch_round[job.id] = rnd
+                first = job.id not in st.first_dispatch
+                st.first_dispatch.setdefault(job.id, rnd)
                 if tn.gauges is not None:
+                    # the wait distribution samples FIRST dispatch only —
+                    # a resume is the same job coming back, not a new wait
                     tn.gauges.on_dispatch(
-                        job.user, nodes=job.trip.nnode,
-                        lanes=job.trip.total_slots,
+                        job.user, nodes=granted,
+                        lanes=granted * job.trip.nppn,
                         resident_bytes=int(job.bytes_per_lane
-                                           * job.trip.total_slots),
-                        wait=float(rnd - submit_round.get(job.id, 0)))
+                                           * granted * job.trip.nppn),
+                        wait=float(rnd - submit_round.get(job.id, 0))
+                        if first else None)
             # lane-backfill phase: free lanes on same-user gangs
             lane_view: Dict[str, List[Tuple[int, int, float]]] = {}
             for rid, run in runs.items():
@@ -501,8 +747,27 @@ class TriplesScheduler:
                 for pj, rid, granted in tn.queue.pop_lane_backfill(
                         lane_view, self._lane_backfill_admit(runs, hosts)):
                     job = pj.payload
-                    jobk = runs[rid].adopt(job.tasks, lanes=granted)
-                    runs[rid].adopted_pack[jobk] = (
+                    run = runs[rid]
+                    if job.checkpoint is not None:
+                        # preempted job adopted onto free lanes: only the
+                        # REMAINING tasks run (pj.n_tasks, which sized the
+                        # no-extension check, counts exactly these), and
+                        # the checkpoint's completed results pre-seed the
+                        # adopted jobk so nothing re-executes
+                        ckpt = job.checkpoint
+                        rem = set(ckpt.remaining)
+                        tasks = [t for t in job.tasks if t.id in rem]
+                        jobk = run.adopt(tasks, lanes=granted)
+                        for tid, v in ckpt.results.items():
+                            run.results[(jobk, tid)] = v
+                        for tid, err in ckpt.failed.items():
+                            run.failed[(jobk, tid)] = err
+                        job.checkpoint = None
+                        if tn.gauges is not None:
+                            tn.gauges.on_resume(job.user)
+                    else:
+                        jobk = run.adopt(job.tasks, lanes=granted)
+                    run.adopted_pack[jobk] = (
                         job.trip.pack_factor(self.cluster.node_spec),
                         float(job.bytes_per_lane))
                     self._log("lane_backfill", job=job.id, user=job.user,
@@ -512,22 +777,38 @@ class TriplesScheduler:
                     active_jobs[job.id] = job
                     granted_lanes[job.id] = granted
                     dispatch_round[job.id] = rnd
+                    first = job.id not in st.first_dispatch
+                    st.first_dispatch.setdefault(job.id, rnd)
                     if tn.gauges is not None:
                         tn.gauges.on_dispatch(
                             job.user, nodes=0, lanes=granted,
                             resident_bytes=int(job.bytes_per_lane
                                                * granted),
-                            wait=float(rnd - submit_round.get(job.id, 0)))
+                            wait=float(rnd - submit_round.get(job.id, 0))
+                            if first else None)
+            # preemption phase: starved waiters may evict over-share gangs
+            preempted = self._maybe_preempt()
             if not active_jobs:
+                if preempted:           # victim's nodes free next round
+                    rnd += 1
+                    continue
                 if len(tn.queue):       # nothing dispatchable and nothing
                     self._log("stalled",  # running: cluster cannot serve
                               queued=[j.id for j in tn.queue.ordered()])
                     break
                 continue
             # execution phase: one task-round per active gang
-            for run in runs.values():
+            st.in_execution = True
+            for run in list(runs.values()):
                 if not run.finished:
                     run.step_round()
+            st.in_execution = False
+            # periodic gang checkpoints (FaultPolicy.checkpoint_every on
+            # the scheduler path: crash/preempt recovery cursors)
+            if (self.policy.checkpoint_every and self.checkpoint_dir
+                    and (rnd + 1) % self.policy.checkpoint_every == 0):
+                for rid, run in runs.items():
+                    self._persist_gang(rid, run.checkpoint(rid), rnd)
             if tn.gauges is not None:   # per-gang lane-occupancy samples
                 for rid, run in runs.items():
                     busy, total = run.lane_counts()
@@ -540,24 +821,34 @@ class TriplesScheduler:
                 run = runs[rid]
                 if not run.job_finished(jobk):
                     continue
-                wait = dispatch_round[jid] - submit_round.get(jid, 0)
+                # wait anchors at FIRST dispatch (the simulator's
+                # SimJobStats.start_t convention): a preempted job's
+                # requeue time is overhead on its span, not queue wait
+                wait = st.first_dispatch.get(
+                    jid, dispatch_round[jid]) - submit_round.get(jid, 0)
                 job.result = run.job_result(jobk, self._alloc_cycles,
                                             wait_rounds=wait)
+                job.result.preemptions = job.preemptions
                 run.adopted_pack.pop(jobk, None)
                 job.state = "done"
                 rounds_held = max(1, rnd + 1 - dispatch_round[jid])
                 is_host = jobk == 0
                 # a lane-backfilled job ran on nodes its user already pays
-                # for via the host gang — no extra node-time is charged
-                node_time = job.trip.nnode * rounds_held if is_host else 0
+                # for via the host gang — no extra node-time is charged.
+                # run.trip, not job.trip: a resumed gang may hold FEWER
+                # nodes than requested (elastic resize) and pays for what
+                # it holds
+                node_time = run.trip.nnode * rounds_held if is_host else 0
                 if is_host:
                     charged_rounds[rid] = rounds_held
                 tn.accountant.charge(job.user, node_time)
-                lanes = granted_lanes.get(jid, job.trip.total_slots)
+                lanes = granted_lanes.get(
+                    jid, run.trip.total_slots if is_host
+                    else job.trip.total_slots)
                 if tn.gauges is not None:
                     tn.gauges.on_release(
                         job.user,
-                        nodes=job.trip.nnode if is_host else 0,
+                        nodes=run.trip.nnode if is_host else 0,
                         node_time=float(node_time),
                         lanes=lanes,
                         resident_bytes=int(job.bytes_per_lane * lanes))
@@ -584,6 +875,7 @@ class TriplesScheduler:
                     del runs[rid]
                     del hosts[rid]
             rnd += 1
+        self._rq = None
         return done
 
     def _run_one(self, key: Tuple[int, int], task: Task,

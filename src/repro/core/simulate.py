@@ -51,16 +51,24 @@ class SimJob:
 @dataclasses.dataclass(frozen=True)
 class SimJobStats:
     job: SimJob
-    start_t: float
-    end_t: float
+    start_t: float                      # FIRST dispatch (wait ends here)
+    end_t: float                        # final completion
     pack_factor: int
-    eff_trip: T.Triples
+    eff_trip: T.Triples                 # width of the LAST segment (a
+                                        # resumed gang may run narrower)
     adopted: bool = False               # started on another gang's free
                                         # lanes (lane-level refill)
+    preemptions: int = 0                # times checkpointed off its nodes
 
     @property
     def wait_s(self) -> float:
         return self.start_t - self.job.submit_t
+
+    @property
+    def span_s(self) -> float:
+        """Submit-to-completion span — the makespan-overhead metric for
+        preempted jobs (includes requeue time and resume overhead)."""
+        return self.end_t - self.job.submit_t
 
 
 @dataclasses.dataclass
@@ -74,6 +82,7 @@ class SimReport:
     effective_util: float               # useful chip-s / (chips × makespan)
     throughput: float                   # completed tasks / makespan
     lane_backfills: int = 0             # jobs started on free lanes
+    preemptions: int = 0                # gang checkpoint evictions
 
     def mean_wait(self, user: Optional[str] = None) -> float:
         ws = [s.wait_s for s in self.stats
@@ -84,6 +93,18 @@ class SimReport:
         ws = [s.wait_s for s in self.stats
               if user is None or s.job.user == user]
         return max(ws) if ws else 0.0
+
+    def p50_wait(self, user: Optional[str] = None) -> float:
+        ws = sorted(s.wait_s for s in self.stats
+                    if user is None or s.job.user == user)
+        return ws[len(ws) // 2] if ws else 0.0
+
+    def job_span(self, job_id: int) -> float:
+        """Submit-to-completion span of one job (preemption overhead)."""
+        for s in self.stats:
+            if s.job.id == job_id:
+                return s.span_s
+        raise KeyError(job_id)
 
     def users(self) -> List[str]:
         return sorted({s.job.user for s in self.stats})
@@ -128,6 +149,8 @@ class _Alloc:
     outstanding: int = 1
     spare: int = 0                      # free lanes during the tail wave
     spare_from: float = math.inf        # when the tail wave starts
+    duration: float = 0.0               # host segment length (preemption
+                                        # computes remaining work from it)
     # jid -> (pack_factor, bytes_per_lane) of still-running adopted jobs;
     # the admission veto counts every co-resident, not just the host
     adopted_pack: Dict[int, Tuple[int, float]] = dataclasses.field(
@@ -141,6 +164,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
              admission: Optional[ten.MemoryAdmission] = None,
              backfill: bool = True,
              lane_refill: bool = False,
+             preemption: Optional[ten.PreemptionPolicy] = None,
              pack_slowdown: float = 0.15,
              half_life: Optional[float] = None) -> SimReport:
     """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes.
@@ -152,13 +176,26 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     held until every hosted job finishes, and the adopted job consumes
     zero fresh nodes. Mirrors core/lanepool.py's continuous refill at
     job granularity.
+
+    With ``preemption`` (shared mode only), the simulator models the
+    live scheduler's checkpoint-based gang preemption: a job still
+    queued ``wait_threshold`` seconds after submit may evict an
+    over-share victim gang (ten.PreemptionPolicy.choose_victim, counting
+    in-flight node-seconds as accrued usage). The victim is charged for
+    the segment it ran, re-enters the queue with its REMAINING duration
+    plus ``resume_overhead`` (the checkpoint/restore cost) and an
+    elastic ``min_nodes``, so it resumes — possibly narrower, at the
+    width-rescaled duration — the moment partial capacity frees.
+    Deterministic like everything else here: no clocks, no RNG, stale
+    finish events are invalidated by a per-job generation counter.
     """
     if mode not in ("shared", "exclusive"):
         raise ValueError(f"mode must be shared|exclusive, got {mode!r}")
     node_spec = node_spec or T.NodeSpec()
     if mode == "exclusive":             # the baseline has no fair-share,
-        quotas, admission = None, None            # admission or refill
-        backfill, lane_refill = False, False      # layer
+        quotas, admission = None, None            # admission, refill or
+        backfill, lane_refill = False, False      # preemption layer
+        preemption = None
     acct = ten.FairShareAccountant(quotas, half_life=half_life)
     queue = ten.JobQueue(acct)
     pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
@@ -173,14 +210,19 @@ def simulate(jobs: List[SimJob], n_nodes: int,
 
     free = n_nodes
     allocs: Dict[int, _Alloc] = {}      # alloc id (host jid) -> state
-    running: Dict[int, Tuple[int, float]] = {}   # jid -> (alloc id, end)
+    running: Dict[int, Tuple[int, float, int]] = {}  # jid -> (aid, end, gen)
+    gen_of: Dict[int, int] = {}         # jid -> current generation
     held: Dict[str, int] = {}
-    stats: List[SimJobStats] = []
+    stats_by_job: Dict[int, SimJobStats] = {}
+    preempt_checks: Dict[int, int] = {}  # jid -> rechecks scheduled
     busy_node_s = 0.0
     useful_chip_s = 0.0
     completed_tasks = 0
     makespan = 0.0
     lane_backfills = 0
+    n_preemptions = 0
+    MAX_RECHECKS = 64                   # termination bound for jobs that
+                                        # can never find a victim
 
     def admit_on_lanes(pj: ten.PendingJob, aid: int) -> bool:
         """Combined host+adopted per-chip footprint must stay admissible
@@ -195,10 +237,25 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         return admission.admit_colocated([p for p, _ in co],
                                          [b for _, b in co])
 
+    def record(job: SimJob, now: float, end: float, eff: T.Triples,
+               adopted: bool = False):
+        """Create/extend the job's stats row. A resumed job keeps its
+        FIRST start (wait ends at first dispatch) and preemption count."""
+        prev = stats_by_job.get(job.id)
+        if prev is None:
+            stats_by_job[job.id] = SimJobStats(
+                job=job, start_t=now, end_t=end,
+                pack_factor=eff.pack_factor(node_spec), eff_trip=eff,
+                adopted=adopted)
+        else:
+            stats_by_job[job.id] = dataclasses.replace(
+                prev, end_t=end, eff_trip=eff,
+                pack_factor=eff.pack_factor(node_spec))
+
     def dispatch(now: float):
         nonlocal free, seq, lane_backfills
         alloc_end: Dict[int, float] = {}
-        for aid, end in running.values():
+        for aid, end, _ in running.values():
             alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
         running_view = [(allocs[aid].nodes, alloc_end[aid] - now)
                         for aid in alloc_end]
@@ -206,21 +263,28 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                                          held_by_user=held,
                                          backfill=backfill):
             job, eff, duration = pending_payload.pop(pj.id)
+            granted = pj.granted_nodes or eff.nnode
+            if granted < eff.nnode:     # elastic resume on partial capacity
+                duration = ten.JobQueue.scaled_est(pj, granted * eff.nppn)
+                eff = T.Triples(granted, eff.nppn, eff.ntpp)
             free -= eff.nnode
             held[job.user] = held.get(job.user, 0) + eff.nnode
             end = now + duration
-            waves = max(1, math.ceil(job.n_tasks / eff.total_slots))
-            tail_occ = job.n_tasks - (waves - 1) * eff.total_slots
+            waves = max(1, math.ceil(pj.n_tasks / eff.total_slots)) \
+                if pj.n_tasks else 1
+            tail_occ = pj.n_tasks - (waves - 1) * eff.total_slots \
+                if pj.n_tasks else eff.total_slots
             al = _Alloc(nodes=eff.nnode, start=now, user=job.user,
                         host_trip=eff, bytes_per_lane=float(job.bytes_per_lane),
                         spare=eff.total_slots - tail_occ,
-                        spare_from=now + (waves - 1) * (duration / waves))
+                        spare_from=now + (waves - 1) * (duration / waves),
+                        duration=duration)
             allocs[job.id] = al
-            running[job.id] = (job.id, end)
-            stats.append(SimJobStats(job=job, start_t=now, end_t=end,
-                                     pack_factor=eff.pack_factor(node_spec),
-                                     eff_trip=eff))
-            heapq.heappush(heap, (end, seq, "finish", job))
+            gen = gen_of.get(job.id, 0) + 1
+            gen_of[job.id] = gen
+            running[job.id] = (job.id, end, gen)
+            record(job, now, end, eff)
+            heapq.heappush(heap, (end, seq, "finish", (job, gen)))
             seq += 1
             if lane_refill and al.spare > 0:
                 heapq.heappush(heap, (al.spare_from, seq, "spare", job))
@@ -231,7 +295,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         # same-user gang (zero fresh nodes; nodes stay held until every
         # hosted job finishes)
         alloc_end: Dict[int, float] = {}
-        for aid, end in running.values():
+        for aid, end, _ in running.values():
             alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
         lane_view: Dict[str, List[Tuple[int, int, float]]] = {}
         for aid, al in allocs.items():
@@ -250,57 +314,144 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                                       float(job.bytes_per_lane))
             # narrower than requested: more waves at the granted width
             duration = ten.JobQueue.scaled_est(pj, granted)
-            pack = eff.pack_factor(node_spec)
             end = now + duration
-            running[job.id] = (aid, end)
+            gen = gen_of.get(job.id, 0) + 1
+            gen_of[job.id] = gen
+            running[job.id] = (aid, end, gen)
             lane_backfills += 1
-            stats.append(SimJobStats(job=job, start_t=now, end_t=end,
-                                     pack_factor=pack,
-                                     eff_trip=eff, adopted=True))
-            heapq.heappush(heap, (end, seq, "finish", job))
+            record(job, now, end, eff, adopted=True)
+            heapq.heappush(heap, (end, seq, "finish", (job, gen)))
             seq += 1
 
+    def try_preempt(now: float, waiter: SimJob) -> bool:
+        """A starved waiter evicts the cheapest over-share victim gang."""
+        nonlocal free, seq, busy_node_s, n_preemptions
+        pol = preemption
+        # victims: allocs hosting ONLY their own job (checkpointing a gang
+        # out from under lane-backfilled co-residents would strand them)
+        candidates = []
+        for aid, al in allocs.items():
+            if al.outstanding != 1 or al.adopted_pack or aid not in running:
+                continue                # not running pure-host: skip (e.g.
+                                        # host done, adopted job draining)
+            _, end, _ = running[aid]
+            remaining = max(0.0, end - now)
+            candidates.append((aid, al.user, al.nodes * remaining,
+                               stats_by_job[aid].preemptions))
+        if not candidates:
+            return False
+        accrued: Dict[str, float] = {}
+        for al in allocs.values():
+            accrued[al.user] = accrued.get(al.user, 0.0) \
+                + al.nodes * (now - al.start)
+        victim = pol.choose_victim(acct, waiter.user, candidates,
+                                   accrued=accrued)
+        if victim is None:
+            return False
+        al = allocs.pop(victim)
+        _, end, _ = running.pop(victim)
+        vstat = stats_by_job[victim]
+        vjob = vstat.job
+        elapsed = now - al.start
+        busy_node_s += al.nodes * elapsed
+        acct.charge(al.user, al.nodes * elapsed)
+        free += al.nodes
+        held[al.user] = held.get(al.user, 0) - al.nodes
+        remaining = max(0.0, end - now)
+        frac_left = remaining / al.duration if al.duration > 0 else 0.0
+        n_left = max(1, int(math.ceil(vjob.n_tasks * frac_left)))
+        # requeue at FULL width with an elastic floor: the checkpoint is
+        # width-agnostic, so the gang resumes on whatever frees first
+        queue.push(ten.PendingJob(
+            id=vjob.id, user=vjob.user, n_nodes=al.host_trip.nnode,
+            submit_seq=queue.next_seq(), submit_t=vjob.submit_t,
+            est_duration=remaining + pol.resume_overhead,
+            bytes_per_lane=vjob.bytes_per_lane,
+            n_slots=al.host_trip.total_slots, n_tasks=n_left,
+            min_nodes=pol.min_nodes(al.host_trip.nnode)))
+        pending_payload[vjob.id] = (vjob, al.host_trip,
+                                    remaining + pol.resume_overhead)
+        stats_by_job[victim] = dataclasses.replace(
+            vstat, preemptions=vstat.preemptions + 1)
+        n_preemptions += 1
+        return True
+
+    def schedule_preempt_check(job: SimJob, now: float):
+        nonlocal seq
+        if preemption is None or job.id not in pending_payload:
+            return
+        if preempt_checks.get(job.id, 0) >= MAX_RECHECKS:
+            return
+        preempt_checks[job.id] = preempt_checks.get(job.id, 0) + 1
+        heapq.heappush(heap, (now + preemption.wait_threshold, seq,
+                              "preempt_check", job))
+        seq += 1
+
     while heap:
-        t, _, kind, payload = heapq.heappop(heap)
+        # drain EVERY event at this instant before dispatching: four small
+        # jobs finishing at the same t must free all their nodes at once,
+        # or an elastic resume would grab the first sliver and stretch
+        t = heap[0][0]
+        batch = []
+        while heap and heap[0][0] == t:
+            batch.append(heapq.heappop(heap))
         acct.decay_to(t)
-        job: SimJob = payload
-        if kind == "submit":
-            try:
-                eff = effective_triples(job.trip, node_spec, mode,
-                                        admission, job.bytes_per_lane)
-            except MemoryError as e:
-                rejected.append((job, str(e)))
-                continue
-            if eff.nnode > n_nodes:
-                rejected.append((job, f"needs {eff.nnode} > {n_nodes} nodes"))
-                continue
-            duration = job_duration(job, eff, node_spec, pack_slowdown)
-            pending_payload[job.id] = (job, eff, duration)
-            queue.push(ten.PendingJob(
-                id=job.id, user=job.user, n_nodes=eff.nnode,
-                submit_seq=queue.next_seq(), submit_t=job.submit_t,
-                est_duration=duration, bytes_per_lane=job.bytes_per_lane,
-                n_slots=eff.total_slots, n_tasks=job.n_tasks))
-        elif kind == "finish":
-            aid, end = running.pop(job.id)
-            al = allocs[aid]
-            al.outstanding -= 1
-            al.adopted_pack.pop(job.id, None)
-            makespan = max(makespan, end)
-            if al.outstanding == 0:     # last hosted job out: nodes free
-                free += al.nodes
-                held[al.user] = held.get(al.user, 0) - al.nodes
-                acct.charge(al.user, al.nodes * (end - al.start))
-                busy_node_s += al.nodes * (end - al.start)
-                del allocs[aid]
+        for _, _, kind, payload in batch:
+            if kind == "submit":
+                job: SimJob = payload
+                try:
+                    eff = effective_triples(job.trip, node_spec, mode,
+                                            admission, job.bytes_per_lane)
+                except MemoryError as e:
+                    rejected.append((job, str(e)))
+                    continue
+                if eff.nnode > n_nodes:
+                    rejected.append(
+                        (job, f"needs {eff.nnode} > {n_nodes} nodes"))
+                    continue
+                duration = job_duration(job, eff, node_spec, pack_slowdown)
+                pending_payload[job.id] = (job, eff, duration)
+                queue.push(ten.PendingJob(
+                    id=job.id, user=job.user, n_nodes=eff.nnode,
+                    submit_seq=queue.next_seq(), submit_t=job.submit_t,
+                    est_duration=duration,
+                    bytes_per_lane=job.bytes_per_lane,
+                    n_slots=eff.total_slots, n_tasks=job.n_tasks))
+            elif kind == "finish":
+                job, gen = payload
+                cur = running.get(job.id)
+                if cur is None or cur[2] != gen:
+                    continue            # stale: the job was preempted and
+                                        # resumed under a newer generation
+                aid, end, _ = running.pop(job.id)
+                al = allocs[aid]
+                al.outstanding -= 1
+                al.adopted_pack.pop(job.id, None)
+                makespan = max(makespan, end)
+                if al.outstanding == 0:  # last hosted job out: nodes free
+                    free += al.nodes
+                    held[al.user] = held.get(al.user, 0) - al.nodes
+                    acct.charge(al.user, al.nodes * (end - al.start))
+                    busy_node_s += al.nodes * (end - al.start)
+                    del allocs[aid]
+            elif kind == "preempt_check":
+                job = payload
+                if job.id in pending_payload:   # still starved: evict
+                    try_preempt(t, job)  # dispatch below places the waiter
         # "spare" events carry no state change — they just give dispatch()
         # a chance to place lane backfills the moment a tail wave opens
         dispatch(t)
+        for _, _, kind, payload in batch:
+            if kind in ("submit", "preempt_check") \
+                    and payload.id in pending_payload:
+                schedule_preempt_check(payload, t)  # still queued: re-arm
 
     for pj in queue.ordered():          # drained heap, still queued: these
         job, _, _ = pending_payload.pop(pj.id)   # can never dispatch
         rejected.append((job, "never dispatched (quota or capacity)"))
 
+    stats = sorted(stats_by_job.values(),
+                   key=lambda s: (s.start_t, s.job.id))
     for s in stats:                     # account completed work
         useful_chip_s += (s.job.n_tasks * s.job.task_s * s.job.trip.ntpp
                           * s.job.load_frac)
@@ -313,7 +464,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         node_util=busy_node_s / (n_nodes * makespan) if makespan else 0.0,
         effective_util=useful_chip_s / (chips * makespan) if makespan else 0.0,
         throughput=completed_tasks / makespan if makespan else 0.0,
-        lane_backfills=lane_backfills)
+        lane_backfills=lane_backfills, preemptions=n_preemptions)
 
 
 # ---------------------------------------------------------------------------
@@ -372,10 +523,14 @@ def mixed_workload(node_spec: Optional[T.NodeSpec] = None, *,
 def compare_modes(jobs: List[SimJob], n_nodes: int,
                   node_spec: Optional[T.NodeSpec] = None,
                   lane_refill: bool = False,
+                  preemption: Optional[ten.PreemptionPolicy] = None,
                   **kw) -> Dict[str, SimReport]:
     """Run the same workload under both policies. With ``lane_refill`` a
     third report, ``shared+refill``, adds lane-level backfill on top of
-    the shared policy so the refill gain is isolated."""
+    the shared policy so the refill gain is isolated; ``preemption``
+    likewise adds a ``shared+preempt`` report (checkpoint-based gang
+    preemption on top of the shared policy) so exclusive vs shared vs
+    preemptive replay deterministically from one workload."""
     node_spec = node_spec or T.NodeSpec()
     admission = kw.pop("admission", ten.MemoryAdmission(node_spec))
     out = {
@@ -388,6 +543,10 @@ def compare_modes(jobs: List[SimJob], n_nodes: int,
         out["shared+refill"] = simulate(jobs, n_nodes, node_spec,
                                         mode="shared", admission=admission,
                                         lane_refill=True, **kw)
+    if preemption is not None:
+        out["shared+preempt"] = simulate(jobs, n_nodes, node_spec,
+                                         mode="shared", admission=admission,
+                                         preemption=preemption, **kw)
     return out
 
 

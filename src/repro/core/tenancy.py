@@ -87,6 +87,100 @@ class FairShareAccountant:
         """Sort key: (normalized usage, submit order). Lower = sooner."""
         return (self.usage(user) / self.quota(user).share, submit_seq)
 
+    def norm_usage(self, user: str) -> float:
+        """Decayed usage over share weight — the fair-share coordinate."""
+        return self.usage(user) / self.quota(user).share
+
+
+# ---------------------------------------------------------------------------
+# fair-share preemption policy (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """When may a running gang be checkpointed to yield its nodes?
+
+    The queue-only scheduler lets a large sweep hold its whole-node
+    allocation until every task completes, starving small interactive
+    jobs (the MISO motivation). Under this policy a gang is PREEMPTIBLE
+    when (a) a queued job has waited past ``wait_threshold`` (rounds on
+    the live scheduler, virtual seconds in the simulator) and (b) the
+    gang owner's decayed normalized usage exceeds the waiter's by the
+    ``overshare`` factor — i.e. the victim is over its fair share
+    relative to the starved tenant, so preempting it moves the cluster
+    TOWARD the fair-share allocation rather than churning peers.
+
+    Victim choice minimizes ``remaining node-work / over-share``: among
+    eligible gangs, prefer the one with the least work left to disturb,
+    discounted by how far over share its owner is (a heavy over-sharer
+    with little remaining work is the cheapest correction). Checkpoint
+    thrash is bounded two ways: a job is preempted at most
+    ``max_preemptions`` times, and each resume pays ``resume_overhead``
+    (checkpoint restore + repack) so the policy's own benefit must cover
+    it.
+
+    Elastic resize: a preempted gang re-enters the queue with
+    ``min_nodes = ceil(elastic_min_frac × nnode)``, so it may resume on
+    PARTIAL capacity (a preempted 8-node sweep continues on 4 free
+    nodes instead of waiting for all 8 — lane state is per-task, not
+    per-slot, so the narrower gang replans the remaining work without
+    recomputation).
+    """
+    wait_threshold: float = 4.0
+    overshare: float = 1.0
+    max_preemptions: int = 1
+    elastic_min_frac: float = 0.5
+    resume_overhead: float = 0.0
+
+    def min_nodes(self, nnode: int) -> int:
+        """Narrowest width a preempted gang may resume at."""
+        return max(1, math.ceil(nnode * self.elastic_min_frac))
+
+    @staticmethod
+    def _norm(acct: FairShareAccountant, user: str,
+              accrued: Optional[Dict[str, float]]) -> float:
+        """Share-normalized usage INCLUDING in-flight consumption.
+
+        The accountant only charges node-time at release, so a gang that
+        has held the whole cluster for an hour still shows zero decayed
+        usage while it runs — exactly the tenant preemption exists to
+        police. ``accrued`` maps user -> node-time held-but-uncharged
+        (rounds on the live scheduler, seconds in the simulator)."""
+        extra = accrued.get(user, 0.0) if accrued else 0.0
+        return (acct.usage(user) + extra) / acct.quota(user).share
+
+    def eligible(self, acct: FairShareAccountant, waiter_user: str,
+                 victim_user: str,
+                 accrued: Optional[Dict[str, float]] = None) -> bool:
+        """Is ``victim_user``'s gang fair game for ``waiter_user``?"""
+        if victim_user == waiter_user:
+            return False
+        v = self._norm(acct, victim_user, accrued)
+        return v > 0 and v > self.overshare * self._norm(
+            acct, waiter_user, accrued)
+
+    def choose_victim(self, acct: FairShareAccountant, waiter_user: str,
+                      candidates: Sequence[Tuple[int, str, float, int]],
+                      accrued: Optional[Dict[str, float]] = None
+                      ) -> Optional[int]:
+        """Pick the victim gang for a starved waiter, or None.
+
+        ``candidates`` rows are ``(victim_id, user, remaining_node_work,
+        times_preempted)``. Deterministic: score ties break on id.
+        """
+        w = self._norm(acct, waiter_user, accrued)
+        best: Optional[Tuple[float, int]] = None
+        for vid, user, remaining, count in candidates:
+            if count >= self.max_preemptions:
+                continue
+            if not self.eligible(acct, waiter_user, user, accrued):
+                continue
+            over = (self._norm(acct, user, accrued) + 1e-12) / (w + 1e-12)
+            score = remaining / over
+            if best is None or (score, vid) < best:
+                best = (score, vid)
+        return best[1] if best is not None else None
+
 
 # ---------------------------------------------------------------------------
 # memory-aware admission control
@@ -197,6 +291,11 @@ class PendingJob:
     n_slots: int = 0                    # lanes the job wants (0 = unknown —
                                         # such a job never lane-backfills)
     n_tasks: int = 0                    # work units (width-rescales est)
+    min_nodes: int = 0                  # 0 = rigid; >0 = elastic: the job
+                                        # may dispatch on any width in
+                                        # [min_nodes, n_nodes] (preempted
+                                        # gangs resuming on partial capacity)
+    granted_nodes: int = 0              # width pop_dispatchable granted
     payload: object = None              # scheduler Tasks / SimJob / anything
 
 
@@ -258,6 +357,15 @@ class JobQueue:
         the head does not fit it reserves its shadow slot, and only safe
         backfill candidates (see shadow_analysis) may pass it. Per-tenant
         ``max_nodes`` caps are enforced against ``held_by_user``.
+
+        Elastic width (``PendingJob.min_nodes > 0``): a job that does not
+        fit at its full width but fits at ``min_nodes`` dispatches
+        SHRUNKEN onto all remaining free nodes (``granted_nodes <
+        n_nodes``) instead of blocking — this is how a preempted gang
+        resumes the moment partial capacity frees. Every returned job has
+        ``granted_nodes`` set (== ``n_nodes`` for rigid jobs). Elastic
+        shrinking only applies ahead of a reservation; behind one, the
+        EASY rule stays width-exact so the shadow analysis stays sound.
         """
         held = dict(held_by_user or {})
         run = list(running)
@@ -266,27 +374,38 @@ class JobQueue:
         shadow, spare = math.inf, 0
         for job in self.ordered():
             cap = self.accountant.quota(job.user).max_nodes
-            if cap is not None and held.get(job.user, 0) + job.n_nodes > cap:
+            need = job.min_nodes if 0 < job.min_nodes < job.n_nodes \
+                else job.n_nodes
+            if cap is not None and held.get(job.user, 0) + need > cap:
                 continue                # over quota: skip, do not block queue
             if blocked_head is None:
-                if job.n_nodes <= free:
+                if need <= free:
+                    granted = min(job.n_nodes, free)
+                    if cap is not None:
+                        granted = min(granted, cap - held.get(job.user, 0))
+                    job.granted_nodes = granted
                     out.append(job)
-                    free -= job.n_nodes
-                    held[job.user] = held.get(job.user, 0) + job.n_nodes
-                    run.append((job.n_nodes, job.est_duration))
+                    free -= granted
+                    held[job.user] = held.get(job.user, 0) + granted
+                    est = self.scaled_est(job, granted * max(
+                        1, job.n_slots // max(1, job.n_nodes))) \
+                        if granted < job.n_nodes and job.n_slots else \
+                        job.est_duration
+                    run.append((granted, est))
                     continue
                 blocked_head = job
                 shadow, spare = shadow_analysis(free, job.n_nodes, run)
                 if not backfill:
                     break
                 continue
-            # behind a reservation: EASY backfill rule only
+            # behind a reservation: EASY backfill rule only (width-exact)
             if job.n_nodes > free:
                 continue
             fits_spare = job.n_nodes <= spare
             ends_in_time = (job.est_duration > 0
                             and job.est_duration <= shadow)
             if fits_spare or ends_in_time:
+                job.granted_nodes = job.n_nodes
                 out.append(job)
                 free -= job.n_nodes
                 spare -= min(spare, job.n_nodes) if fits_spare else 0

@@ -30,7 +30,7 @@ from repro.checkpoint import Checkpointer
 from repro.core import autotune, packing
 from repro.core.faults import FaultPolicy
 from repro.core.lanepool import (LanePool, LaneTask, PoolStepError,
-                                 RefillExecutor)
+                                 RefillExecutor, RefillStats)
 from repro.core.monitor import RunMonitor, TenantGauges
 from repro.core.tenancy import MemoryAdmission
 from repro.launch.train import make_train_step
@@ -57,6 +57,10 @@ class SweepResult:
     lane_steps: int = 0                 # active lane-steps (useful work)
     refills: int = 0                    # lane attaches performed
     n_traces: int = 0                   # jit traces of the packed step
+    preempted: bool = False             # drained to checkpoints mid-run;
+                                        # re-run with the same
+                                        # checkpoint_dir resumes (at any
+                                        # max_pack) bit-identically
 
 
 def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
@@ -71,7 +75,11 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
               tenant: str = "default",
               gauges: Optional[TenantGauges] = None,
               early_stop: Optional[Callable[[SweepTask, int, float], bool]]
-              = None) -> SweepResult:
+              = None,
+              preempt: Optional[Callable[[RefillStats], bool]]
+              = None,
+              stragglers_fn: Optional[Callable[[], List[int]]] = None
+              ) -> SweepResult:
     """Train all tasks on a continuously-refilled lane pool.
 
     ``steps`` is the sweep-wide budget; a task's own ``SweepTask.steps``
@@ -81,8 +89,32 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
     step caps the pool capacity BEFORE anything runs (multi-tenant
     admission control, DESIGN.md §4.3); ``gauges`` charges the pool to
     ``tenant`` in the shared per-tenant LLload table and receives per-step
-    lane-occupancy samples for the ``sweep:{tenant}`` gang."""
+    lane-occupancy samples for the ``sweep:{tenant}`` gang.
+
+    Preemption (DESIGN.md §8): ``preempt(stats)`` is consulted after
+    every pool step; when it fires the pool DRAINS — every in-flight
+    lane's state is checkpointed at its exact cursor — and the call
+    returns with ``SweepResult.preempted`` set. A later ``run_sweep``
+    with the same ``checkpoint_dir`` (and ANY ``max_pack``, e.g. half
+    when only partial capacity freed) resumes every task from its saved
+    step and produces bit-identical remaining losses: lanes are
+    independent under vmap and batches are keyed (seed, step), so the
+    loss stream cannot depend on which lane or capacity served it.
+    Requires ``checkpoint_dir`` — a drain without a checkpoint seam
+    would silently discard progress.
+
+    Speculative stragglers (``FaultPolicy.speculative_stragglers``):
+    flagged lanes duplicate onto free pool slots, first result wins.
+    On THIS substrate's single-host lockstep pool every lane steps in
+    one compiled call, so per-lane step-time skew cannot arise and the
+    default monitor signal never flags anyone — pass ``stragglers_fn``
+    to supply a real signal (per-device pools, external telemetry, or
+    tests); the default stays ``RunMonitor.stragglers`` (EWMA per-lane
+    times, live once lane times exist)."""
     policy = policy or FaultPolicy()
+    if preempt is not None and not checkpoint_dir:
+        raise ValueError("preempt requires checkpoint_dir: draining "
+                         "without a checkpoint seam discards progress")
     opt = opt or optim.adamw(weight_decay=0.0)
     step_fn = make_train_step(model, opt)
 
@@ -134,6 +166,7 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
     losses: Dict[int, List[float]] = {t.id: [] for t in tasks}
     mon = RunMonitor(straggler_ratio=policy.straggler_ratio)
     backoffs = 0
+    preempted = False
     totals = dict(global_steps=0, lane_steps=0, refills=0, n_traces=0)
     gang = f"sweep:{tenant}"
 
@@ -211,6 +244,13 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
             ck_for(lt.id).save((params, opt_state), lt.step_done,
                                blocking=False)
 
+        def on_preempt(lt: LaneTask, params, opt_state):
+            # drain: the lane's exact cursor goes to the task's own
+            # checkpoint dir — the resume path is the ordinary restore
+            ck = ck_for(lt.id)
+            ck.save((params, opt_state), lt.step_done, blocking=False)
+            ck.wait()
+
         def on_step(global_step: int, active: int, capacity: int):
             mon.end_step(global_step)
             if gauges is not None:
@@ -221,7 +261,11 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
             on_step_start=mon.start_step, on_step=on_step,
             checkpoint_every=(policy.checkpoint_every
                               if checkpoint_dir else 0),
-            on_checkpoint=on_checkpoint if checkpoint_dir else None)
+            on_checkpoint=on_checkpoint if checkpoint_dir else None,
+            should_preempt=preempt,
+            on_preempt=on_preempt if checkpoint_dir else None,
+            speculative=policy.speculative_stragglers,
+            stragglers_fn=stragglers_fn or mon.stragglers)
         try:
             stats = ex.run(queue)
         except PoolStepError:   # pool-wide OOM: halve capacity, redo
@@ -247,6 +291,9 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
         totals["lane_steps"] += stats.lane_steps
         totals["refills"] += stats.attaches
         totals["n_traces"] += stats.n_traces
+        if stats.preempted:
+            preempted = True            # drained to per-task checkpoints;
+                                        # a re-run resumes every cursor
         if gauges is not None:
             gauges.on_release(tenant, nodes=1,
                               node_time=time.perf_counter() - t_pool,
@@ -254,6 +301,8 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
                               resident_bytes=bytes_per_lane * pool.capacity)
         queue = []
 
+    for ck in _cks.values():            # join any pending async saves
+        ck.wait()
     return SweepResult(losses=losses, wall_s=time.perf_counter() - t0,
                        pack_factor=pack, backoffs=backoffs,
                        bytes_per_lane=bytes_per_lane,
@@ -261,4 +310,5 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
                        global_steps=totals["global_steps"],
                        lane_steps=totals["lane_steps"],
                        refills=totals["refills"],
-                       n_traces=totals["n_traces"])
+                       n_traces=totals["n_traces"],
+                       preempted=preempted)

@@ -167,6 +167,31 @@ def test_llmapreduce_packed_vs_slotted():
     assert float(total) == sum(i * i for i in range(9))
 
 
+def test_llmapreduce_empty_items():
+    """Regression: chunk[-1] IndexError on empty items (and results[0]
+    with a reduce_fn). Empty map returns []; empty reduce has no identity
+    element, so it raises a clear error instead."""
+    assert llmapreduce(lambda x: x * x, [], mode="packed") == []
+    assert llmapreduce(lambda x: x * x, [], mode="slotted") == []
+    with pytest.raises(ValueError, match="empty items"):
+        llmapreduce(lambda x: x * x, [], reduce_fn=lambda a, b: a + b)
+
+
+def test_llmapreduce_packed_no_padding_waste():
+    """9 items over 4 slots: the old wave loop padded the ragged last wave
+    (12 lane invocations); the refill pool masks the empty lanes instead
+    (9 active lane-steps, one compile)."""
+    items = [jnp.float32(i) for i in range(9)]
+    out, stats = llmapreduce(lambda x: x * x, items,
+                             trip=T.Triples(1, 4, 1), mode="packed",
+                             return_stats=True)
+    np.testing.assert_allclose([float(v) for v in out],
+                               [i * i for i in range(9)])
+    assert stats.lane_steps == 9        # no padded duplicates ran
+    assert stats.global_steps == 3      # ceil(9/4) pool steps
+    assert stats.n_traces == 1
+
+
 def test_batch_server_greedy_decode():
     model = _tiny_lm()
     params = model.init(jax.random.PRNGKey(0))

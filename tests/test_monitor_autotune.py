@@ -59,6 +59,53 @@ def test_auto_nppn_with_real_jit():
                            max_factor=4, headroom=1.0)
 
 
+def _fake_measure(per_lane: int):
+    """Synthetic probe: a k-lane packed step is exactly k × per_lane bytes
+    (memory_analysis is monotone in the packing factor), counting calls."""
+    calls = []
+
+    def measure(make_packed, k, example_args_fn):
+        calls.append(k)
+        return StaticProfile(argument_bytes=per_lane * k, temp_bytes=0,
+                             output_bytes=0, flops=0, bytes_accessed=0)
+
+    return measure, calls
+
+
+@pytest.mark.parametrize("max_factor", [3, 5, 6, 7, 12])
+@pytest.mark.parametrize("frontier", [2, 3, 5, 6, 9, 100])
+def test_auto_nppn_non_power_of_two_frontier(monkeypatch, max_factor,
+                                             frontier):
+    """Regression for the packing-frontier gap: the exponential probe never
+    tested factors in (2^m, max_factor], so an admission-derived
+    non-power-of-two cap (e.g. 6) silently packed at 4. Lock the selected
+    factor to the brute-force frontier for every (max_factor, budget)."""
+    per_lane = 10 ** 6
+    budget = per_lane * frontier        # k fits iff k <= frontier
+    measure, calls = _fake_measure(per_lane)
+    monkeypatch.setattr(autotune, "measure_packed", measure)
+    d = autotune.auto_nppn(None, None, budget, max_factor=max_factor,
+                           headroom=1.0)
+    brute = max(k for k in range(1, max_factor + 1) if k * per_lane <= budget)
+    assert d.nppn_per_chip == brute, (
+        f"frontier gap: selected {d.nppn_per_chip}, brute force says {brute}")
+    assert max(calls) <= max_factor     # never probes past the cap
+    if d.rejected is not None:
+        assert d.rejected == brute + 1 or d.rejected > brute
+
+
+def test_auto_nppn_max_factor_6_selects_6_when_it_fits(monkeypatch):
+    """The live utilization loss from ISSUE: admission caps max_pack at 6,
+    6 fits, but the old probe returned 4."""
+    per_lane = 10 ** 6
+    measure, calls = _fake_measure(per_lane)
+    monkeypatch.setattr(autotune, "measure_packed", measure)
+    d = autotune.auto_nppn(None, None, per_lane * 64, max_factor=6,
+                           headroom=1.0)
+    assert d.nppn_per_chip == 6
+    assert sorted(set(calls)) == [1, 2, 4, 6]   # O(log) probes, cap included
+
+
 def test_predict_oom_guards_the_48_job_case():
     p = StaticProfile(argument_bytes=48 * 4 * 10 ** 9, temp_bytes=0,
                       output_bytes=0, flops=0, bytes_accessed=0)

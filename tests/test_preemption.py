@@ -1,0 +1,526 @@
+"""Checkpoint-based gang preemption + elastic resize (DESIGN.md §8):
+pool drain/rehydrate bit-identity at any capacity, sweep preempt/resume,
+fair-share victim policy, live scheduler preemption, simulator replay,
+speculative straggler re-execution."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import simulate as S
+from repro.core import tenancy as ten
+from repro.core import triples as T
+from repro.core.lanepool import (LanePool, LaneTask, PoolSnapshot,
+                                 RefillExecutor, rehydrate)
+from repro.core.monitor import TenantGauges
+from repro.core.scheduler import ClusterState, Task, Tenancy, TriplesScheduler
+
+
+# ---------------------------------------------------------------------------
+# tiny-model harness (same shapes as test_lanepool)
+# ---------------------------------------------------------------------------
+
+def _setup():
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (8, 16)) * 0.1,
+                "w2": jax.random.normal(k2, (16, 4)) * 0.1}
+
+    def loss(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"])
+        return jnp.mean((h @ params["w2"] - batch["y"]) ** 2)
+
+    opt = optim.sgd()
+
+    def step(params, opt_state, batch, lr):
+        l, g = jax.value_and_grad(loss)(params, batch)
+        upd, opt_state = opt.update(g, opt_state, params, lr)
+        return optim.apply_updates(params, upd), opt_state, {"loss": l}
+
+    return init, opt, step
+
+
+def _batch(seed, step, n=16):
+    rng = np.random.Generator(np.random.Philox(key=seed,
+                                               counter=[step, 0, 0, 0]))
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    return {"x": x, "y": (x[:, :4] * 0.5).astype(np.float32)}
+
+
+def _pool(step, init, opt, capacity):
+    tmpl = init(jax.random.PRNGKey(0))
+    return LanePool(capacity, step, template_params=tmpl,
+                    template_opt=opt.init(tmpl),
+                    template_hparams=jnp.float32(0.0))
+
+
+def _lane_task(init, opt, i, steps):
+    return LaneTask(
+        id=i, hparams=jnp.float32(1e-2),
+        init_fn=lambda i=i: (lambda p: (p, opt.init(p)))(
+            init(jax.random.PRNGKey(i))),
+        batch_fn=lambda s, i=i: _batch(i, s),
+        steps=steps)
+
+
+def _collect(ex, tasks):
+    losses = {}
+    ex.on_metrics = lambda t, s, m: losses.setdefault(t.id, []).append(
+        float(np.asarray(m["loss"]))) and False
+    stats = ex.run(tasks)
+    return losses, stats
+
+
+BUDGETS = [3, 7, 4, 6, 2, 5]
+
+
+# ---------------------------------------------------------------------------
+# executor drain -> PoolSnapshot -> rehydrate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("resume_capacity", [4, 2])
+def test_drain_rehydrate_bit_identical(resume_capacity):
+    """Preempt mid-run, resume on the SAME or HALVED capacity: the
+    concatenated per-task loss streams equal an uninterrupted run bit for
+    bit (lane independence + (seed, step)-keyed batches)."""
+    init, opt, step = _setup()
+    mk = lambda: [_lane_task(init, opt, i, b) for i, b in enumerate(BUDGETS)]
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 4)), mk())
+
+    ex = RefillExecutor(_pool(step, init, opt, 4),
+                        should_preempt=lambda st: st.global_steps >= 3)
+    part, stats = _collect(ex, mk())
+    assert stats.preempted and ex.snapshot is not None
+    assert stats.global_steps == 3      # drained right after the trigger
+
+    resumed, stats2 = _collect(
+        RefillExecutor(_pool(step, init, opt, resume_capacity)),
+        rehydrate(ex.snapshot, mk()))
+    assert not stats2.preempted
+    for i, b in enumerate(BUDGETS):
+        full = part.get(i, []) + resumed.get(i, [])
+        assert np.float32(full).tolist() == np.float32(base[i]).tolist(), i
+        assert len(full) == b           # budgets honored exactly
+
+
+def test_pool_snapshot_checkpointer_roundtrip(tmp_path):
+    """Snapshot persists through checkpoint/Checkpointer's atomic layout
+    and restores to identical cursors + bit-identical lane states."""
+    init, opt, step = _setup()
+    tmpl = init(jax.random.PRNGKey(0))
+    mk = lambda: [_lane_task(init, opt, i, b) for i, b in enumerate(BUDGETS)]
+    ex = RefillExecutor(_pool(step, init, opt, 3),
+                        should_preempt=lambda st: st.global_steps >= 2)
+    _collect(ex, mk())
+    snap = ex.snapshot
+    d = str(tmp_path / "snap")
+    snap.save(d)
+    loaded = PoolSnapshot.load(d, tmpl, opt.init(tmpl), jnp.float32(0.0))
+    assert loaded.capacity == snap.capacity == 3
+    assert loaded.queued == snap.queued
+    assert [(r.task_id, r.step_done) for r in loaded.lanes] == \
+        [(r.task_id, r.step_done) for r in snap.lanes]
+    for a, b in zip(loaded.lanes, snap.lanes):
+        for la, lb in zip(jax.tree_util.tree_leaves(a.params),
+                          jax.tree_util.tree_leaves(b.params)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    # a run resumed from the LOADED snapshot matches the uninterrupted run
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 3)), mk())
+    part_ex = RefillExecutor(_pool(step, init, opt, 3),
+                             should_preempt=lambda st: st.global_steps >= 2)
+    part, _ = _collect(part_ex, mk())
+    resumed, _ = _collect(RefillExecutor(_pool(step, init, opt, 3)),
+                          rehydrate(loaded, mk()))
+    for i in range(len(BUDGETS)):
+        assert part.get(i, []) + resumed.get(i, []) == base[i]
+
+
+def test_request_preempt_from_callback():
+    """request_preempt() drains after the current step — the seam the
+    scheduler's preemption policy uses."""
+    init, opt, step = _setup()
+    ex = RefillExecutor(_pool(step, init, opt, 2))
+    fired = []
+
+    def on_metrics(t, s, m):
+        if t.id == 0 and s == 1 and not fired:
+            fired.append(True)
+            ex.request_preempt()
+        return False
+
+    ex.on_metrics = on_metrics
+    stats = ex.run([_lane_task(init, opt, i, 5) for i in range(3)])
+    assert stats.preempted
+    assert {r.task_id for r in ex.snapshot.lanes} == {0, 1}
+    assert ex.snapshot.queued == [2]
+
+
+# ---------------------------------------------------------------------------
+# sweep-level preempt -> per-task checkpoints -> elastic resume
+# ---------------------------------------------------------------------------
+
+def _lm_fixture():
+    from repro import configs
+    from repro.models import ParallelCtx, build_model
+    model = build_model(configs.get("stablelm-1.6b").reduced(),
+                        ParallelCtx(moe_oracle=True))
+
+    def batch_fn(seed, step):
+        from repro.data import SyntheticLM
+        ds = SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=seed)
+        return ds.batch(step)
+
+    return model, batch_fn
+
+
+@pytest.mark.parametrize("resume_pack", [4, 2])
+def test_run_sweep_preempt_resume_bit_identical(tmp_path, resume_pack):
+    """The acceptance criterion: a preempted sweep resumes from
+    checkpoint with bit-identical final results at the original AND the
+    halved capacity. (Resuming at capacity 1 is correct but not bit-
+    exact: dropping the lane axis entirely lets XLA compile an unbatched
+    program whose reduction order may differ in the last float bit —
+    DESIGN.md §8.)"""
+    from repro.launch.sweep import SweepTask, run_sweep
+    model, batch_fn = _lm_fixture()
+    tasks = lambda: [SweepTask(id=i, lr=1e-3, seed=i) for i in range(4)]
+    base = run_sweep(model, tasks(), batch_fn=batch_fn, steps=4, max_pack=4)
+
+    ck = str(tmp_path / "sweep")
+    part = run_sweep(model, tasks(), batch_fn=batch_fn, steps=4, max_pack=4,
+                     checkpoint_dir=ck,
+                     preempt=lambda st: st.global_steps >= 2)
+    assert part.preempted
+    assert all(len(v) == 2 for v in part.losses.values())
+    res = run_sweep(model, tasks(), batch_fn=batch_fn, steps=4,
+                    max_pack=resume_pack, checkpoint_dir=ck)
+    assert not res.preempted
+    for i in range(4):
+        full = part.losses[i] + res.losses[i]
+        assert np.float32(full).tolist() == \
+            np.float32(base.losses[i]).tolist(), i
+
+
+def test_run_sweep_preempt_requires_checkpoint_dir():
+    from repro.launch.sweep import SweepTask, run_sweep
+    model, batch_fn = _lm_fixture()
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_sweep(model, [SweepTask(id=0, lr=1e-3, seed=0)],
+                  batch_fn=batch_fn, steps=2, preempt=lambda st: True)
+
+
+# ---------------------------------------------------------------------------
+# fair-share preemption policy (unit)
+# ---------------------------------------------------------------------------
+
+def test_policy_eligibility_and_victim_score():
+    acct = ten.FairShareAccountant()
+    acct.charge("hog", 100.0)
+    acct.charge("mid", 40.0)
+    pol = ten.PreemptionPolicy(overshare=1.0, max_preemptions=1)
+    assert pol.eligible(acct, "iris", "hog")
+    assert not pol.eligible(acct, "hog", "hog")     # never self
+    assert not pol.eligible(acct, "hog", "iris")    # iris isn't over-share
+    # victim = lowest remaining-work / over-share: hog is 2.5x further
+    # over share than mid, so hog loses even with slightly more remaining
+    cands = [(0, "hog", 50.0, 0), (1, "mid", 30.0, 0)]
+    assert pol.choose_victim(acct, "iris", cands) == 0
+    # exhausted preemption budget protects a gang
+    assert pol.choose_victim(acct, "iris",
+                             [(0, "hog", 50.0, 1)]) is None
+    # accrued (in-flight, uncharged) usage counts toward over-share
+    acct2 = ten.FairShareAccountant()
+    assert pol.choose_victim(acct2, "iris", [(0, "hog", 10.0, 0)]) is None
+    assert pol.choose_victim(acct2, "iris", [(0, "hog", 10.0, 0)],
+                             accrued={"hog": 64.0}) == 0
+
+
+def test_policy_min_nodes_elastic_floor():
+    pol = ten.PreemptionPolicy(elastic_min_frac=0.5)
+    assert pol.min_nodes(8) == 4
+    assert pol.min_nodes(3) == 2
+    assert pol.min_nodes(1) == 1
+
+
+def test_pop_dispatchable_elastic_grant():
+    """An elastic job (min_nodes set) dispatches shrunken onto whatever
+    free width exists instead of blocking the queue."""
+    q = ten.JobQueue()
+    q.push(ten.PendingJob(id=0, user="u", n_nodes=4, submit_seq=1,
+                          est_duration=4.0, n_slots=8, n_tasks=32,
+                          min_nodes=2))
+    out = q.pop_dispatchable(3, [])
+    assert [j.id for j in out] == [0]
+    assert out[0].granted_nodes == 3
+    # rigid job with the same shape blocks instead
+    q2 = ten.JobQueue()
+    q2.push(ten.PendingJob(id=1, user="u", n_nodes=4, submit_seq=1,
+                           est_duration=4.0, n_slots=8, n_tasks=32))
+    assert q2.pop_dispatchable(3, []) == []
+
+
+# ---------------------------------------------------------------------------
+# live scheduler: preempt -> checkpoint -> elastic resume
+# ---------------------------------------------------------------------------
+
+def _mkjob(n, tag):
+    return [Task(id=i, fn=lambda ctx, i=i: (tag, i)) for i in range(n)]
+
+
+def _drive(policy, checkpoint_dir=None, fault_policy=None):
+    cl = ClusterState(4)
+    gauges = TenantGauges()
+    sched = TriplesScheduler(
+        cl, policy=fault_policy,
+        tenancy=Tenancy.create(node_spec=cl.node_spec, gauges=gauges,
+                               preemption=policy),
+        checkpoint_dir=checkpoint_dir)
+    hog = sched.submit("hog", _mkjob(64, "hog"), T.Triples(4, 2, 1))
+    iris = sched.submit("iris", _mkjob(4, "iris"), T.Triples(1, 2, 1))
+    done = sched.run_queued()
+    return sched, gauges, hog, iris, done
+
+
+def test_scheduler_preempts_checkpoints_and_resumes_elastically():
+    pol = ten.PreemptionPolicy(wait_threshold=2, elastic_min_frac=0.5)
+    sched, gauges, hog, iris, done = _drive(pol)
+    _, _, hog0, iris0, done0 = _drive(None)
+
+    # identical final results, nothing lost or duplicated by the preempt
+    assert done[hog.id].results == done0[hog0.id].results
+    assert not done[hog.id].failed and not done[iris.id].failed
+    assert done[hog.id].preemptions == 1
+    # the starved interactive job dispatched sooner
+    assert done[iris.id].wait_rounds < done0[iris0.id].wait_rounds
+    kinds = [e.kind for e in sched.events]
+    assert kinds.count("preempt") == 1 and kinds.count("resume") == 1
+    resume = next(e for e in sched.events if e.kind == "resume")
+    # iris held a node at resume time: the hog came back NARROWER
+    assert resume.detail["width"] < resume.detail["full_width"]
+    # gauges carry the preemption lifecycle
+    assert gauges.gauge("hog").jobs_preempted == 1
+    assert gauges.gauge("hog").jobs_resumed == 1
+    assert "PRE" in gauges.table()
+
+
+def test_scheduler_gang_checkpoint_every_writes_cursors(tmp_path):
+    """FaultPolicy.checkpoint_every flows through the scheduler path:
+    periodic gang-cursor checkpoints land in the atomic step layout."""
+    from repro.checkpoint import load_extra
+    from repro.core.faults import FaultPolicy
+    pol = ten.PreemptionPolicy(wait_threshold=2)
+    ckdir = str(tmp_path / "gangs")
+    sched, _, hog, iris, done = _drive(
+        pol, checkpoint_dir=ckdir,
+        fault_policy=FaultPolicy(checkpoint_every=2))
+    assert not done[hog.id].failed
+    gang_dir = os.path.join(ckdir, f"gang_{hog.id}")
+    assert os.path.isdir(gang_dir)
+    extra, step = load_extra(gang_dir)
+    assert extra["gang_checkpoint"] and extra["user"] == "hog"
+    done_ids = set(extra["completed"]) | {int(k) for k in extra["failed"]}
+    remaining = set(extra["remaining"])
+    assert done_ids | remaining <= set(range(64))
+    assert not done_ids & remaining
+
+
+def test_preempted_job_lane_backfill_resume_skips_completed_tasks():
+    """A preempted job adopted onto a same-user gang's free lanes must run
+    ONLY its remaining tasks (checkpoint results pre-seed the adopted
+    jobk) — completed task closures never re-execute."""
+    executed = []
+
+    def mk(n, tag):
+        return [Task(id=i,
+                     fn=lambda ctx, i=i: executed.append((tag, i)) or (tag, i))
+                for i in range(n)]
+
+    cl = ClusterState(4)
+    pol = ten.PreemptionPolicy(wait_threshold=2, elastic_min_frac=0.5)
+    sched = TriplesScheduler(cl, tenancy=Tenancy.create(
+        node_spec=cl.node_spec, preemption=pol))
+    # hog gang A (small, gets preempted), hog gang B (wide, frees lanes
+    # mid-run), iris's job (triggers the preemption, then HOLDS its two
+    # nodes so A can only come back via B's free lanes)
+    ja = sched.submit("hog", mk(12, "A"), T.Triples(2, 2, 1))
+    jb = sched.submit("hog", mk(42, "B"), T.Triples(2, 4, 1))
+    ji = sched.submit("iris", mk(24, "iris"), T.Triples(2, 2, 1))
+    done = sched.run_queued()
+    assert not done[ja.id].failed and not done[jb.id].failed
+    assert done[ja.id].preemptions == 1
+    assert sorted(done[ja.id].results) == list(range(12))
+    # the resume went through lane backfill, not a whole-node allocation
+    kinds = [e.kind for e in sched.events]
+    assert kinds.count("preempt") == 1
+    backfills = [e for e in sched.events if e.kind == "lane_backfill"]
+    assert any(e.detail["job"] == ja.id for e in backfills)
+    # every A task executed exactly once — no completed-task re-execution
+    a_runs = [i for tag, i in executed if tag == "A"]
+    assert sorted(a_runs) == list(range(12))
+
+
+def test_preempt_outside_run_queued_raises():
+    cl = ClusterState(2)
+    sched = TriplesScheduler(cl, tenancy=Tenancy.create(
+        node_spec=cl.node_spec))
+    with pytest.raises(RuntimeError, match="no active gang"):
+        sched.preempt(0)
+
+
+# ---------------------------------------------------------------------------
+# simulator: deterministic preemption replay
+# ---------------------------------------------------------------------------
+
+def _sim_workload():
+    spec = T.NodeSpec()
+    cpn = spec.chips_per_node
+    jobs = [S.SimJob(id=0, user="hog", submit_t=0.0, kind="sweep",
+                     n_tasks=1024, task_s=2.0, trip=T.Triples(4, 2 * cpn, 1),
+                     bytes_per_lane=1.5e9, load_frac=0.3)]
+    for i in range(4):
+        jobs.append(S.SimJob(id=1 + i, user="iris", submit_t=10.0,
+                             kind="sweep", n_tasks=cpn, task_s=1.0,
+                             trip=T.Triples(1, cpn, 1),
+                             bytes_per_lane=1.5e9, load_frac=0.3))
+    return jobs
+
+
+def test_simulator_preemption_cuts_waits_with_bounded_overhead():
+    jobs = _sim_workload()
+    base = S.simulate(jobs, 4, mode="shared")
+    pol = ten.PreemptionPolicy(wait_threshold=8.0, resume_overhead=2.0)
+    pre = S.simulate(jobs, 4, mode="shared", preemption=pol)
+    assert pre.preemptions == 1
+    assert pre.p50_wait("iris") < base.p50_wait("iris")
+    assert pre.job_span(0) <= 1.10 * base.job_span(0)
+    # every job completed exactly once in both replays
+    assert len(base.stats) == len(pre.stats) == len(jobs)
+    hog = next(s for s in pre.stats if s.job.id == 0)
+    assert hog.preemptions == 1
+    assert hog.start_t == 0.0           # wait clock anchored at 1st dispatch
+
+
+def test_simulator_preemption_deterministic_replay():
+    jobs = _sim_workload()
+    pol = ten.PreemptionPolicy(wait_threshold=8.0, resume_overhead=2.0)
+    a = S.simulate(jobs, 4, mode="shared", preemption=pol)
+    b = S.simulate(jobs, 4, mode="shared", preemption=pol)
+    assert [(s.job.id, s.start_t, s.end_t, s.preemptions) for s in a.stats] \
+        == [(s.job.id, s.start_t, s.end_t, s.preemptions) for s in b.stats]
+    assert a.makespan == b.makespan and a.preemptions == b.preemptions
+
+
+def test_simulator_elastic_narrow_resume():
+    """Only part of the cluster frees -> the victim resumes NARROWER
+    (eff width < requested), stretching by the width-rescaled duration."""
+    spec = T.NodeSpec()
+    cpn = spec.chips_per_node
+    jobs = [S.SimJob(id=0, user="hog", submit_t=0.0, kind="sweep",
+                     n_tasks=1024, task_s=2.0, trip=T.Triples(4, 2 * cpn, 1),
+                     bytes_per_lane=1.5e9, load_frac=0.3),
+            S.SimJob(id=1, user="iris", submit_t=10.0, kind="sweep",
+                     n_tasks=cpn, task_s=1.0, trip=T.Triples(1, cpn, 1),
+                     bytes_per_lane=1.5e9, load_frac=0.3),
+            S.SimJob(id=2, user="iris", submit_t=10.0, kind="sweep",
+                     n_tasks=cpn, task_s=8.0, trip=T.Triples(2, cpn, 1),
+                     bytes_per_lane=1.5e9, load_frac=0.3)]
+    pol = ten.PreemptionPolicy(wait_threshold=8.0, resume_overhead=2.0,
+                               elastic_min_frac=0.5)
+    pre = S.simulate(jobs, 4, mode="shared", preemption=pol)
+    hog = next(s for s in pre.stats if s.job.id == 0)
+    assert pre.preemptions == 1
+    assert hog.eff_trip.nnode < 4       # resumed on partial capacity
+    assert hog.eff_trip.nnode >= pol.min_nodes(4)
+
+
+def test_compare_modes_adds_preemptive_report():
+    jobs = _sim_workload()
+    pol = ten.PreemptionPolicy(wait_threshold=8.0, resume_overhead=2.0)
+    reports = S.compare_modes(jobs, 4, preemption=pol)
+    assert set(reports) == {"exclusive", "shared", "shared+preempt"}
+    assert reports["shared+preempt"].preemptions >= 1
+    assert reports["exclusive"].preemptions == 0
+    table = S.comparison_table(reports)
+    assert "shared+preempt" in table
+
+
+# ---------------------------------------------------------------------------
+# speculative straggler re-execution (FaultPolicy.speculative_stragglers)
+# ---------------------------------------------------------------------------
+
+def test_speculative_twin_first_result_wins_single_finish():
+    """A flagged straggler lane is duplicated onto a free slot; exactly
+    one on_finish fires per task and the loss stream is untouched (twin
+    metrics suppressed)."""
+    init, opt, step = _setup()
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 3)),
+                       [_lane_task(init, opt, 0, 6),
+                        _lane_task(init, opt, 1, 2)])
+    finishes = []
+    ex = RefillExecutor(_pool(step, init, opt, 3),
+                        on_finish=lambda t, p, o: finishes.append(t.id),
+                        speculative=True, stragglers_fn=lambda: [0])
+    losses, stats = _collect(ex, [_lane_task(init, opt, 0, 6),
+                                  _lane_task(init, opt, 1, 2)])
+    assert stats.spec_attaches == 1
+    assert stats.spec_wins + stats.spec_cancelled == 1  # one twin resolved
+    assert sorted(finishes) == [0, 1]   # exactly one finish per task
+    assert losses[0] == base[0] and losses[1] == base[1]
+    assert stats.n_traces == 1          # twin attach never retraces
+    # useful-work accounting never double-counts a speculated task
+    assert stats.lane_steps == 6 + 2
+    assert stats.spec_lane_steps > 0
+
+
+def test_speculative_twin_on_lower_lane_keeps_final_metrics():
+    """Regression: a twin landing on a LOWER lane index than its primary
+    must not win the scan-order tie — the primary delivers the final
+    on_metrics (full loss stream) and the twin is cancelled."""
+    init, opt, step = _setup()
+    # A(steps=1) occupies lane 0 and frees it; B's twin then lands on
+    # lane 0, BELOW B's own lane 1
+    mk = lambda: [_lane_task(init, opt, 0, 1), _lane_task(init, opt, 1, 5),
+                  _lane_task(init, opt, 2, 5)]
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 3)), mk())
+    finishes = []
+    ex = RefillExecutor(_pool(step, init, opt, 3),
+                        on_finish=lambda t, p, o: finishes.append(t.id),
+                        speculative=True, stragglers_fn=lambda: [1])
+    losses, stats = _collect(ex, mk())
+    assert stats.spec_attaches == 1
+    assert len(losses[1]) == 5          # final step's loss not swallowed
+    assert losses[1] == base[1] and losses[2] == base[2]
+    assert sorted(finishes) == [0, 1, 2]
+
+
+def test_speculation_never_displaces_queued_work():
+    """With work still queued, free lanes refill with real tasks before
+    any twin launches."""
+    init, opt, step = _setup()
+    ex = RefillExecutor(_pool(step, init, opt, 2),
+                        speculative=True, stragglers_fn=lambda: [0, 1])
+    stats = ex.run([_lane_task(init, opt, i, 3) for i in range(4)])
+    # queue (4 tasks, 2 lanes) only drains at the end; by then at most
+    # one lane can free while another still runs
+    assert stats.lane_steps >= 4 * 3    # all real work done
+    assert stats.attaches == 4
+
+
+# ---------------------------------------------------------------------------
+# monitor: wait histograms
+# ---------------------------------------------------------------------------
+
+def test_wait_histogram_and_quantile():
+    g = TenantGauges()
+    for w in (0.0, 1.0, 3.0, 5.0, 100.0):
+        g.on_dispatch("u", nodes=1, wait=w)
+    hist = g.wait_histogram("u")
+    assert sum(hist) == 5
+    assert hist[-1] == 1                # the 100.0 lands in the open bucket
+    assert g.wait_quantile("u", 0.5) == 3.0
+    assert g.wait_quantile("u", 1.0) == 100.0
+    assert g.wait_histogram("nobody") == [0] * len(hist)
