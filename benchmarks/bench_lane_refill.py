@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro import optim
 from repro.core.lanepool import LanePool, LaneTask, RefillExecutor, run_waves
 
@@ -101,6 +101,13 @@ def run():
     emit("lane_refill.speedup", wave.global_steps / refill.global_steps,
          f"{wave.global_steps / refill.global_steps:.2f}x fewer pool steps "
          f"on skewed budgets 2..12, pool={CAPACITY}, tasks={N_TASKS}")
+    write_json("lane_refill", dict(
+        capacity=CAPACITY, n_tasks=N_TASKS,
+        wave=dict(global_steps=wave.global_steps, occupancy=wave.occupancy,
+                  wall_s=wave_s),
+        refill=dict(global_steps=refill.global_steps,
+                    occupancy=refill.occupancy, wall_s=refill_s),
+        speedup=wave.global_steps / refill.global_steps))
     return wave, refill
 
 

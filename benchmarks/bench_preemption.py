@@ -27,7 +27,7 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.core import simulate as S
 from repro.core import tenancy as ten
 from repro.core import triples as T
@@ -132,7 +132,15 @@ def run_live(smoke: bool):
 
 def run(smoke: bool = False):
     reports = run_simulated()
-    run_live(smoke)
+    done = run_live(smoke)
+    write_json("preemption", dict(
+        smoke=smoke,
+        sim={name: dict(makespan=r.makespan, node_util=r.node_util,
+                        throughput=r.throughput, preemptions=r.preemptions,
+                        p50_wait_iris=r.p50_wait("iris"))
+             for name, r in reports.items()},
+        live_wait_rounds={str(jid): jr.wait_rounds
+                          for jid, jr in done.items()}))
     return reports
 
 

@@ -1,7 +1,9 @@
 """Shared benchmark utilities: timing + CSV emission (contract of run.py:
-``name,us_per_call,derived`` rows)."""
+``name,us_per_call,derived`` rows) + JSON artifact persistence."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List
 
@@ -12,6 +14,20 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json(bench: str, payload: dict) -> str:
+    """Persist a bench's structured output as ``BENCH_<bench>.json`` (in
+    $BENCH_JSON_DIR, default cwd). CI uploads every BENCH_*.json as a
+    workflow artifact so trajectories (capacity traces, per-mode tables)
+    survive per run instead of scrolling away in the log."""
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=str)
+    print(f"# wrote {path}", flush=True)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

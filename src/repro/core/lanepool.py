@@ -93,6 +93,8 @@ class LanePool:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
+        self._step_fn = step_fn         # kept for resized()
+        self._donate = donate
         self.params = packing.stack_trees([template_params] * capacity)
         self.opt_state = packing.stack_trees([template_opt] * capacity)
         self.hparams = packing.stack_trees([template_hparams] * capacity)
@@ -110,6 +112,20 @@ class LanePool:
     @property
     def n_traces(self) -> int:
         return self._n_traces
+
+    def resized(self, capacity: int) -> "LanePool":
+        """A FRESH empty pool of ``capacity`` lanes running the same step
+        function (the online-repacking seam, core/repack.py). Templates
+        come from lane 0's current state — any lane state carries the
+        per-lane pytree shapes. The new pool compiles its own masked step
+        (one trace per distinct capacity); callers drain this pool first
+        and re-attach through the executor's refill path."""
+        return LanePool(capacity, self._step_fn,
+                        template_params=packing.tree_get_lane(self.params, 0),
+                        template_opt=packing.tree_get_lane(self.opt_state, 0),
+                        template_hparams=packing.tree_get_lane(
+                            self.hparams, 0),
+                        donate=self._donate)
 
     def free_lanes(self) -> List[int]:
         return [i for i in range(self.capacity) if not self.active[i]]
@@ -248,9 +264,12 @@ class RefillStats:
     """What continuous refill did — the benchmark's raw material."""
     global_steps: int = 0               # pool.step() invocations
     lane_steps: int = 0                 # active lane-steps (useful work)
-    attaches: int = 0
-    n_traces: int = 0
+    attaches: int = 0                   # incl. re-attaches after a repack
+    n_traces: int = 0                   # summed across repacked pools
     preempted: bool = False             # run drained to a PoolSnapshot
+    repacks: int = 0                    # mid-run capacity changes
+    capacity_trace: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)           # (global_step, new_capacity)
     spec_attaches: int = 0              # speculative twins launched
     spec_wins: int = 0                  # twin delivered the result first
     spec_cancelled: int = 0             # loser twins detached unfinished
@@ -293,6 +312,20 @@ class RefillExecutor:
     returns with ``stats.preempted`` set. ``rehydrate(snapshot, tasks)``
     rebuilds a queue that resumes bit-identically on any capacity.
 
+    Online elastic repacking (DESIGN.md §9): ``repack_policy`` (a
+    repack.RepackController, or a RepackPolicy to wrap in a private
+    controller) watches per-step occupancy/queue-depth/measured-HBM
+    telemetry; when it decides on a new capacity the executor drains
+    every lane IN PROCESS (no checkpoint round-trip — live states ride
+    straight back into the queue), swaps ``self.pool`` for
+    ``pool.resized(new_capacity)`` and refills between two masked
+    steps. Per-task results are bit-identical across repacks for the
+    same reason rehydrate is capacity-agnostic; ``stats.repacks`` and
+    ``stats.capacity_trace`` record the trajectory, and ``n_traces``
+    sums over every pool the run compiled (one per distinct capacity).
+    Speculative twins are cancelled at a repack (the primary's state is
+    canonical, same rule as a preemption drain).
+
     Speculative stragglers: with ``speculative`` set and a
     ``stragglers_fn`` (e.g. RunMonitor.stragglers) naming suspect lanes,
     a flagged lane's task is duplicated onto a free slot once the queue
@@ -320,6 +353,7 @@ class RefillExecutor:
                                                None]] = None,
                  speculative: bool = False,
                  stragglers_fn: Optional[Callable[[], List[int]]] = None,
+                 repack_policy: Optional[Any] = None,
                  record_history: bool = False):
         self.pool = pool
         self.on_metrics = on_metrics
@@ -332,14 +366,26 @@ class RefillExecutor:
         self.on_preempt = on_preempt
         self.speculative = speculative
         self.stragglers_fn = stragglers_fn
+        if repack_policy is not None and not hasattr(repack_policy, "decide"):
+            from repro.core.repack import RepackController
+            repack_policy = RepackController(repack_policy)
+        self.repack = repack_policy     # repack.RepackController (observe/
+                                        # decide) — online elastic resize
         self.record_history = record_history
         self.history: List[Tuple[int, int, int]] = []
         self.snapshot: Optional[PoolSnapshot] = None
+        self._trace_base = 0            # traces of pools retired by repack
         self._preempt_requested = False
         self._twin: Dict[int, int] = {}         # lane <-> twin lane
         self._spec_lanes: set = set()           # lanes hosting a twin copy
         self._speculated: set = set()           # task ids already twinned
         self._zero_batch: Any = None
+
+    @property
+    def n_traces(self) -> int:
+        """Jit traces across every pool this executor has run (repack
+        swaps pools; each distinct capacity compiles once)."""
+        return self._trace_base + self.pool.n_traces
 
     def request_preempt(self):
         """Drain to a PoolSnapshot after the current pool step (safe to
@@ -451,6 +497,49 @@ class RefillExecutor:
         return PoolSnapshot(capacity=self.pool.capacity, lanes=lanes,
                             queued=queued)
 
+    def _repack(self, queue: deque, lane_task: List[Optional[LaneTask]],
+                new_capacity: int, stats: RefillStats
+                ) -> List[Optional[LaneTask]]:
+        """Swap the pool for one of ``new_capacity`` lanes between two
+        masked steps: drain every live lane (its exact state becomes its
+        own init_fn — no checkpoint round-trip), requeue drained tasks
+        AHEAD of the untouched tail (the rehydrate ordering, so resumes
+        assign work deterministically), rebuild via pool.resized. Twins
+        are cancelled; the primary copy carries the canonical state."""
+        resumed: List[LaneTask] = []
+        for lane, t in enumerate(lane_task):
+            if t is None:
+                continue
+            if lane in self._spec_lanes:        # twin: primary survives
+                self.pool.detach(lane)
+                stats.spec_cancelled += 1
+                continue
+            params, opt_state = self.pool.detach(lane)
+
+            # one-shot resume closure: hands back the live state at the
+            # re-attach, then RESTORES the task's own init_fn — so a
+            # later re-init (OOM-backoff restart, a caller reusing the
+            # task) goes through the original path (checkpoint restore,
+            # cursor reset) instead of resurrecting stale drain state
+            def resume(t=t, params=params, opt_state=opt_state,
+                       orig=t.init_fn):
+                t.init_fn = orig
+                return params, opt_state
+
+            t.init_fn = resume
+            resumed.append(t)
+        self._twin.clear()
+        self._spec_lanes.clear()
+        tail = list(queue)
+        queue.clear()
+        queue.extend(resumed)
+        queue.extend(tail)
+        self._trace_base += self.pool.n_traces
+        self.pool = self.pool.resized(new_capacity)
+        stats.repacks += 1
+        stats.capacity_trace.append((stats.global_steps, new_capacity))
+        return [None] * new_capacity
+
     def run(self, tasks: Sequence[LaneTask]) -> RefillStats:
         queue = deque(tasks)
         pool = self.pool
@@ -520,7 +609,18 @@ class RefillExecutor:
                 self.snapshot = self._drain(queue, lane_task, stats)
                 stats.preempted = True
                 break
-        stats.n_traces = pool.n_traces
+            # online elastic repack: telemetry in, capacity decision out
+            if self.repack is not None:
+                self.repack.observe(stats.global_steps, n_attached,
+                                    pool.capacity, len(queue))
+                live = sum(1 for t in lane_task if t is not None)
+                new_cap = self.repack.decide(stats.global_steps,
+                                             pool.capacity, len(queue), live)
+                if new_cap is not None and new_cap != pool.capacity:
+                    lane_task = self._repack(queue, lane_task, new_cap,
+                                             stats)
+                    pool = self.pool
+        stats.n_traces = self._trace_base + pool.n_traces
         return stats
 
 

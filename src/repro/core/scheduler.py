@@ -488,10 +488,20 @@ class TriplesScheduler:
 
         Memory-aware admission runs HERE — an over-footprint pack_factor is
         rejected before it ever holds a node (vs. the paper's 21/48 tasks
-        dead on CUDA OOM after dispatch)."""
+        dead on CUDA OOM after dispatch). When a repack event has reported
+        a MEASURED per-lane footprint for this user
+        (MemoryAdmission.record_measured — core/repack.py closes the
+        loop), admission consumes ``effective_bytes``: the measurement
+        TIGHTENS the decision when the live footprint grew past the
+        compile-time profile and fills in an unknown profile, but never
+        relaxes a pessimistic static profile (the measurement is keyed
+        per tenant and may come from a different job of theirs)."""
         if self.tenancy is None:
             raise RuntimeError("submit() requires a Tenancy; use "
                                "run_triples_job for the single-user path")
+        adm = self.tenancy.admission
+        if adm is not None:
+            bytes_per_lane = adm.effective_bytes(user, bytes_per_lane)
         job = GangJob(id=self._next_job_id, user=user, tasks=tasks,
                       trip=trip, bytes_per_lane=bytes_per_lane)
         self._next_job_id += 1
@@ -503,7 +513,6 @@ class TriplesScheduler:
             self._log("reject", job=job.id, user=user,
                       reason=job.reject_reason)
             return job
-        adm = self.tenancy.admission
         if adm is not None and bytes_per_lane > 0:
             decision = adm.admit(trip, bytes_per_lane)
             if not decision.admitted:

@@ -32,6 +32,10 @@ from typing import Dict, List, Optional, Tuple
 from repro.core import tenancy as ten
 from repro.core import triples as T
 
+if False:                               # type-only; repack pulls in jax via
+    from repro.core.repack import RepackPolicy      # monitor — keep the
+                                        # simulator import-light and pure
+
 
 @dataclasses.dataclass(frozen=True)
 class SimJob:
@@ -83,6 +87,7 @@ class SimReport:
     throughput: float                   # completed tasks / makespan
     lane_backfills: int = 0             # jobs started on free lanes
     preemptions: int = 0                # gang checkpoint evictions
+    repacks: int = 0                    # modeled online capacity changes
 
     def mean_wait(self, user: Optional[str] = None) -> float:
         ws = [s.wait_s for s in self.stats
@@ -137,6 +142,39 @@ def job_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
     return waves * job.task_s * (1.0 + pack_slowdown * (pack - 1))
 
 
+def repack_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
+                    pack_slowdown: float, policy) -> Tuple[float, int]:
+    """Virtual runtime under ONLINE adaptive repacking (core/repack.py):
+    the job starts at the conservative ``policy.start_capacity`` lanes
+    per chip, runs one wave per rung, pays ``policy.repack_latency_s``
+    per resize (drain + recompile + refill) and climbs by
+    ``policy.grow_factor`` until it reaches the pack the static path
+    would have been granted immediately. Returns (duration, n_repacks) —
+    this is how ``compare_modes`` PRICES the policy: shared+repack trades
+    a convergence ramp for never trusting an ahead-of-time probe."""
+    target = eff.pack_factor(node_spec)
+    pack = max(1, min(int(policy.start_capacity), target))
+    remaining = job.n_tasks
+    t = 0.0
+    repacks = 0
+    while remaining > 0:
+        # slots scale linearly with the pack factor at fixed chips
+        slots = max(1, (eff.total_slots * pack) // max(1, target))
+        wave_t = job.task_s * (1.0 + pack_slowdown * (pack - 1))
+        if pack < target:
+            remaining -= min(remaining, slots)   # one wave, then grow
+            t += wave_t
+            if remaining > 0:           # a job that finished during the
+                t += float(policy.repack_latency_s)   # ramp never pays
+                pack = min(target,      # for a resize it never performed
+                           int(math.ceil(pack * policy.grow_factor)))
+                repacks += 1
+        else:
+            t += math.ceil(remaining / slots) * wave_t
+            remaining = 0
+    return t, repacks
+
+
 @dataclasses.dataclass
 class _Alloc:
     """One whole-node allocation — possibly hosting several jobs under
@@ -165,6 +203,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
              backfill: bool = True,
              lane_refill: bool = False,
              preemption: Optional[ten.PreemptionPolicy] = None,
+             repack: Optional["RepackPolicy"] = None,
              pack_slowdown: float = 0.15,
              half_life: Optional[float] = None) -> SimReport:
     """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes.
@@ -188,6 +227,13 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     width-rescaled duration — the moment partial capacity frees.
     Deterministic like everything else here: no clocks, no RNG, stale
     finish events are invalidated by a per-job generation counter.
+
+    With ``repack`` (shared mode only; a core.repack.RepackPolicy or any
+    object with start_capacity/grow_factor/repack_latency_s), packing
+    jobs run the ONLINE convergence ramp instead of trusting the static
+    grant: start conservative, one wave per rung, a priced latency per
+    resize (see repack_duration). ``SimReport.repacks`` counts the
+    modeled capacity changes.
     """
     if mode not in ("shared", "exclusive"):
         raise ValueError(f"mode must be shared|exclusive, got {mode!r}")
@@ -196,6 +242,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         quotas, admission = None, None            # admission, refill or
         backfill, lane_refill = False, False      # preemption layer
         preemption = None
+        repack = None
     acct = ten.FairShareAccountant(quotas, half_life=half_life)
     queue = ten.JobQueue(acct)
     pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
@@ -221,6 +268,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     makespan = 0.0
     lane_backfills = 0
     n_preemptions = 0
+    n_repacks = 0
     MAX_RECHECKS = 64                   # termination bound for jobs that
                                         # can never find a victim
 
@@ -409,7 +457,13 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                     rejected.append(
                         (job, f"needs {eff.nnode} > {n_nodes} nodes"))
                     continue
-                duration = job_duration(job, eff, node_spec, pack_slowdown)
+                if repack is not None and eff.pack_factor(node_spec) > 1:
+                    duration, nrep = repack_duration(
+                        job, eff, node_spec, pack_slowdown, repack)
+                    n_repacks += nrep
+                else:
+                    duration = job_duration(job, eff, node_spec,
+                                            pack_slowdown)
                 pending_payload[job.id] = (job, eff, duration)
                 queue.push(ten.PendingJob(
                     id=job.id, user=job.user, n_nodes=eff.nnode,
@@ -464,7 +518,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         node_util=busy_node_s / (n_nodes * makespan) if makespan else 0.0,
         effective_util=useful_chip_s / (chips * makespan) if makespan else 0.0,
         throughput=completed_tasks / makespan if makespan else 0.0,
-        lane_backfills=lane_backfills, preemptions=n_preemptions)
+        lane_backfills=lane_backfills, preemptions=n_preemptions,
+        repacks=n_repacks)
 
 
 # ---------------------------------------------------------------------------
@@ -524,13 +579,16 @@ def compare_modes(jobs: List[SimJob], n_nodes: int,
                   node_spec: Optional[T.NodeSpec] = None,
                   lane_refill: bool = False,
                   preemption: Optional[ten.PreemptionPolicy] = None,
+                  repack: Optional["RepackPolicy"] = None,
                   **kw) -> Dict[str, SimReport]:
     """Run the same workload under both policies. With ``lane_refill`` a
     third report, ``shared+refill``, adds lane-level backfill on top of
     the shared policy so the refill gain is isolated; ``preemption``
     likewise adds a ``shared+preempt`` report (checkpoint-based gang
-    preemption on top of the shared policy) so exclusive vs shared vs
-    preemptive replay deterministically from one workload."""
+    preemption on top of the shared policy), and ``repack`` a
+    ``shared+repack`` report (online adaptive packing with its priced
+    convergence ramp, repack_duration) so every policy layer replays
+    deterministically from one workload."""
     node_spec = node_spec or T.NodeSpec()
     admission = kw.pop("admission", ten.MemoryAdmission(node_spec))
     out = {
@@ -547,6 +605,10 @@ def compare_modes(jobs: List[SimJob], n_nodes: int,
         out["shared+preempt"] = simulate(jobs, n_nodes, node_spec,
                                          mode="shared", admission=admission,
                                          preemption=preemption, **kw)
+    if repack is not None:
+        out["shared+repack"] = simulate(jobs, n_nodes, node_spec,
+                                        mode="shared", admission=admission,
+                                        repack=repack, **kw)
     return out
 
 

@@ -213,6 +213,35 @@ class MemoryAdmission:
             raise ValueError(f"headroom must be in (0, 1], got {headroom}")
         self.node_spec = node_spec or T.NodeSpec()
         self.headroom = headroom
+        self.measured: Dict[str, float] = {}    # key -> measured B/lane
+
+    # -------------------------------------------- measured footprints
+    def record_measured(self, key: str, bytes_per_lane: float):
+        """Record a MEASURED per-lane footprint for ``key`` (a tenant or
+        job family). Repack events report these (core/repack.py): the
+        live telemetry of a running pool beats the compile-time profile,
+        which goes stale the moment the workload changes phase."""
+        if key and bytes_per_lane > 0:
+            self.measured[key] = float(bytes_per_lane)
+
+    def effective_bytes(self, key: str, static_bytes: float) -> float:
+        """The footprint admission should trust for ``key``.
+
+        Measurements are keyed PER TENANT while static profiles are per
+        job, so a measurement may come from a different (smaller)
+        workload of the same tenant — trusting it downward would wave an
+        over-footprint gang straight into the paper's 21/48 OOM. The
+        measurement therefore only TIGHTENS admission (measured larger
+        than the profile: the live footprint grew past what the compiler
+        predicted) or fills in an unknown profile (``static_bytes <=
+        0``); a pessimistic static profile is never relaxed by a
+        measurement of unverifiable provenance."""
+        m = self.measured.get(key, 0.0) if key else 0.0
+        if m <= 0:
+            return static_bytes
+        if static_bytes <= 0:
+            return m
+        return max(m, static_bytes)
 
     def max_pack(self, bytes_per_lane: float) -> int:
         """Largest lanes-per-chip count the footprint allows (0 = none)."""

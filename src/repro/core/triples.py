@@ -62,7 +62,17 @@ class SlotAssignment:
     node: int
     slot: int                            # process index within node
     chips: Tuple[int, ...]               # chip ids on the node (round-robin)
-    pack_lane: int                       # lane index among co-resident slots
+    pack_lane: int                       # lane id, UNIQUE among the slots
+                                         # sharing any of this slot's chips.
+                                         # Ids are dense per chip when chip
+                                         # groups don't wrap; wrapped groups
+                                         # (ntpp not dividing chips_per_node)
+                                         # can form odd cycles in the chip-
+                                         # sharing graph, where a proper
+                                         # assignment NEEDS more ids than
+                                         # one chip's co-residency count —
+                                         # treat it as a label, not an index
+                                         # into a pack_factor-sized pool
     task_ids: Tuple[int, ...]            # tasks this slot executes, in order
 
 
@@ -117,10 +127,25 @@ def plan(n_tasks: int, triples: Triples,
         task_lists[t % len(slot_keys)].append(t)
 
     slots = []
+    # pack_lane is derived from ACTUAL chip co-residency, not the arithmetic
+    # (j*ntpp)//cpn: when ntpp does not divide cpn the round-robin chip
+    # groups WRAP (e.g. cpn=4, ntpp=3: slot 1 takes chips (3,0,1)), so two
+    # slots sharing a chip could land on the same arithmetic lane. Each slot
+    # takes the smallest lane index unused on every chip it touches — lanes
+    # are unique per (node, chip) by construction, and the assignment
+    # reduces to (j*ntpp)//cpn in the non-wrapping case.
+    lanes_taken: dict = {}              # (node, chip) -> set of lane ids
     for (node, j), tl in zip(slot_keys, task_lists):
         first = (j * triples.ntpp) % cpn
         chips = tuple((first + i) % cpn for i in range(min(triples.ntpp, cpn)))
-        pack_lane = (j * triples.ntpp) // cpn
+        taken = set()
+        for c in chips:
+            taken |= lanes_taken.setdefault((node, c), set())
+        pack_lane = 0
+        while pack_lane in taken:
+            pack_lane += 1
+        for c in chips:
+            lanes_taken[(node, c)].add(pack_lane)
         slots.append(SlotAssignment(node=node, slot=j, chips=chips,
                                     pack_lane=pack_lane, task_ids=tuple(tl)))
     return TriplesPlan(triples=triples, node_spec=node_spec,

@@ -23,7 +23,7 @@ fixed length per ``run``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,9 +59,14 @@ class Request:
 class ServeStats:
     """Decode accounting for the last ``BatchServer.run``."""
     global_steps: int = 0         # vmapped decode invocations
-    lane_steps: int = 0           # active lane-steps (tokens produced)
+    lane_steps: int = 0           # tokens produced (invariant: Σ max_new)
+    lane_slots: int = 0           # lane-slots stepped (Σ pool width/step —
+                                  # what adaptive resizing shrinks)
     prefills: int = 0
     n_requests: int = 0
+    resizes: int = 0              # adaptive lane-pool rebuilds
+    lane_trace: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)     # (global_step, lane count) per resize
 
     @property
     def occupancy(self) -> float:
@@ -69,15 +74,33 @@ class ServeStats:
             return 0.0
         return self.lane_steps / self.global_steps
 
+    @property
+    def step_efficiency(self) -> float:
+        """Fraction of stepped lane-slots that produced a kept token."""
+        if not self.lane_slots:
+            return 0.0
+        return self.lane_steps / self.lane_slots
+
 
 class BatchServer:
-    """Greedy-decode server over a persistent lane pool."""
+    """Greedy-decode server over a persistent lane pool.
 
-    def __init__(self, model: Model, params, batch_lanes: int, max_len: int):
+    With ``adaptive_lanes`` the pool RESIZES to queue depth between decode
+    steps (the serving face of online elastic repacking, core/repack.py):
+    as the request tail drains, live lanes are compacted into a smaller
+    pool so the vmapped step stops paying for dead lanes. Lane counts are
+    rounded to powers of two, so at most log2(batch_lanes) decode variants
+    ever compile; per-request tokens are unchanged (lanes are independent
+    under vmap).
+    """
+
+    def __init__(self, model: Model, params, batch_lanes: int, max_len: int,
+                 adaptive_lanes: bool = False):
         self.model = model
         self.params = params
         self.lanes = batch_lanes
         self.max_len = max_len
+        self.adaptive_lanes = adaptive_lanes
         self.stats = ServeStats()
         self._prefill = jax.jit(make_prefill(model, max_len))
         # decode one lane at batch 1, vmapped over the lane axis of the
@@ -95,8 +118,19 @@ class BatchServer:
         self.stats = ServeStats(n_requests=len(queue))
         if not queue:
             return results
-        C = min(self.lanes, len(queue))
         S_pad = max(len(r.prompt) for r in queue)
+        # enqueue-time KV guard: decode writes positions S_pad .. S_pad +
+        # max_new - 2 (the first token comes from prefill), so the cache
+        # must hold S_pad + max_new - 1 positions. Reject up front instead
+        # of silently walking ``pos`` past the cache length.
+        for r in queue:
+            if S_pad + r.max_new - 1 > self.max_len:
+                raise ValueError(
+                    f"request {r.id}: padded prompt ({S_pad}) + max_new "
+                    f"({r.max_new}) needs {S_pad + r.max_new - 1} KV "
+                    f"positions > max_len ({self.max_len}); shorten the "
+                    f"prompt or raise max_len")
+        C = min(self.lanes, len(queue))
 
         def prefill_one(r: Request):
             toks = np.zeros((1, S_pad), np.int32)
@@ -108,7 +142,7 @@ class BatchServer:
             return first, cache
 
         # seed the pool from the first prefill so every leaf has its lane
-        # axis before any swap (shapes fixed for the whole run)
+        # axis before any swap (shapes fixed until an adaptive resize)
         first0, cache0 = prefill_one(queue[0])
         pool_cache = packing.stack_trees([cache0] * C)
         cur = np.zeros((C, 1, 1), np.int32)          # per-lane (B=1, T=1)
@@ -124,32 +158,73 @@ class BatchServer:
             pos[lane, 0] = S_pad
             lane_req[lane] = r
 
+        def resize(new_c: int):
+            """Compact live lanes into a pool of ``new_c`` lanes (pure
+            pytree reads/stack — per-lane state is untouched)."""
+            nonlocal pool_cache, cur, pos, lane_req, C
+            live = [l for l, r in enumerate(lane_req) if r is not None]
+            caches = [packing.tree_get_lane(pool_cache, l) for l in live]
+            template = caches[0] if caches \
+                else packing.tree_get_lane(pool_cache, 0)
+            new_cache = packing.stack_trees(
+                caches + [template] * (new_c - len(caches)))
+            new_cur = np.zeros((new_c, 1, 1), np.int32)
+            new_pos = np.full((new_c, 1), S_pad, np.int32)
+            new_req: List[Optional[Request]] = [None] * new_c
+            for i, l in enumerate(live):
+                new_cur[i] = cur[l]
+                new_pos[i] = pos[l]
+                new_req[i] = lane_req[l]
+            pool_cache, cur, pos, lane_req, C = \
+                new_cache, new_cur, new_pos, new_req, new_c
+            self.stats.resizes += 1
+            self.stats.lane_trace.append((self.stats.global_steps, new_c))
+
         attach(0, queue.pop(0), first0, cache0)
         for lane in range(1, C):
             if queue:
                 attach(lane, queue.pop(0))
 
-        while any(r is not None for r in lane_req):
-            active = np.array([r is not None for r in lane_req])
-            # record the token each active lane is about to consume/emit
-            for lane, r in enumerate(lane_req):
-                if r is not None:
-                    r.out.append(int(cur[lane, 0, 0]))
-            logits, pool_cache = self._step(
-                self.params,
-                {"tokens": jnp.asarray(cur), "pos": jnp.asarray(pos)},
-                pool_cache)
-            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)   # (C, 1)
-            self.stats.global_steps += 1
-            self.stats.lane_steps += int(active.sum())
-            cur[active, 0, 0] = nxt[active, 0]
-            pos[active, 0] += 1          # inactive lanes stay frozen
+        while True:
+            # emit + retire phase: the token each active lane carries came
+            # from the PREVIOUS step (or its prefill). Record it, and
+            # retire lanes whose budget is now exhausted BEFORE stepping —
+            # stepping a finished lane would produce a token nobody
+            # consumes (one wasted vmapped step per request).
             for lane, r in enumerate(lane_req):
                 if r is None:
                     continue
+                r.out.append(int(cur[lane, 0, 0]))
+                self.stats.lane_steps += 1
                 if len(r.out) >= r.max_new:
                     r.done = True        # lane frees NOW — no wave barrier
                     lane_req[lane] = None
-                    if queue:            # a waiting request joins mid-decode
-                        attach(lane, queue.pop(0))
+            n_live = sum(1 for r in lane_req if r is not None)
+            if n_live == 0 and not queue:
+                break
+            if self.adaptive_lanes:
+                demand = n_live + len(queue)
+                desired = 1 << (max(1, demand) - 1).bit_length()
+                desired = min(self.lanes, max(desired, n_live, 1))
+                if desired < C:
+                    resize(desired)
+            if n_live:
+                active = np.array([r is not None for r in lane_req])
+                logits, pool_cache = self._step(
+                    self.params,
+                    {"tokens": jnp.asarray(cur), "pos": jnp.asarray(pos)},
+                    pool_cache)
+                nxt = np.asarray(jnp.argmax(logits, -1), np.int32)  # (C, 1)
+                self.stats.global_steps += 1
+                self.stats.lane_slots += C
+                cur[active, 0, 0] = nxt[active, 0]
+                pos[active, 0] += 1      # inactive lanes stay frozen
+            # refill phase — strictly AFTER the step: a joiner's first
+            # token (from its prefill) sits in ``cur`` and must be
+            # emitted next iteration before the lane is ever stepped;
+            # attaching pre-step would let the step consume and overwrite
+            # it, shifting the request's whole output by one
+            for lane, r in enumerate(lane_req):
+                if r is None and queue:  # waiting request joins mid-decode
+                    attach(lane, queue.pop(0))
         return results

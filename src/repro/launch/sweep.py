@@ -28,6 +28,7 @@ import numpy as np
 from repro import optim
 from repro.checkpoint import Checkpointer
 from repro.core import autotune, packing
+from repro.core import repack as rp
 from repro.core.faults import FaultPolicy
 from repro.core.lanepool import (LanePool, LaneTask, PoolStepError,
                                  RefillExecutor, RefillStats)
@@ -61,6 +62,9 @@ class SweepResult:
                                         # re-run with the same
                                         # checkpoint_dir resumes (at any
                                         # max_pack) bit-identically
+    repacks: int = 0                    # adaptive_pack capacity changes
+    capacity_trace: List[tuple] = dataclasses.field(
+        default_factory=list)           # (global_step, new_capacity)
 
 
 def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
@@ -78,7 +82,10 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
               = None,
               preempt: Optional[Callable[[RefillStats], bool]]
               = None,
-              stragglers_fn: Optional[Callable[[], List[int]]] = None
+              stragglers_fn: Optional[Callable[[], List[int]]] = None,
+              adaptive_pack: bool = False,
+              repack_policy: Optional[rp.RepackPolicy] = None,
+              measure_bytes: Optional[Callable[[], float]] = None
               ) -> SweepResult:
     """Train all tasks on a continuously-refilled lane pool.
 
@@ -110,7 +117,21 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
     default monitor signal never flags anyone — pass ``stragglers_fn``
     to supply a real signal (per-device pools, external telemetry, or
     tests); the default stays ``RunMonitor.stragglers`` (EWMA per-lane
-    times, live once lane times exist)."""
+    times, live once lane times exist).
+
+    Online elastic repacking (``adaptive_pack`` — DESIGN.md §9): skip
+    the static auto_nppn probe entirely, start at the conservative
+    ``RepackPolicy.start_capacity`` and let a RepackController converge
+    the pack factor to the frontier ONLINE from live telemetry
+    (occupancy EWMA, queue depth, measured pool footprint vs
+    ``hbm_budget``). Per-task losses stay bit-identical across repacks;
+    ``SweepResult.repacks``/``capacity_trace`` record the trajectory
+    and the final ``pack_factor`` is the converged capacity. When
+    ``admission`` is set, each repack reports the MEASURED per-lane
+    footprint to it (record_measured), so later scheduler admissions
+    for this tenant consume measurements instead of static profiles.
+    ``measure_bytes`` injects a footprint telemetry source (default:
+    live jax array accounting)."""
     policy = policy or FaultPolicy()
     if preempt is not None and not checkpoint_dir:
         raise ValueError("preempt requires checkpoint_dir: draining "
@@ -137,7 +158,11 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
         return (p, o, b, lr)
 
     single_profile = None
-    if hbm_budget is not None:
+    repack_pol = repack_policy or rp.RepackPolicy()
+    if adaptive_pack:
+        # conservative start; the controller converges online (no probe)
+        pack = max(1, min(repack_pol.start_capacity, max_pack, n))
+    elif hbm_budget is not None:
         decision = autotune.auto_nppn(make_packed, example_args,
                                       hbm_budget, max_factor=max_pack)
         pack = decision.nppn_per_chip
@@ -167,8 +192,21 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
     mon = RunMonitor(straggler_ratio=policy.straggler_ratio)
     backoffs = 0
     preempted = False
-    totals = dict(global_steps=0, lane_steps=0, refills=0, n_traces=0)
+    totals = dict(global_steps=0, lane_steps=0, refills=0, n_traces=0,
+                  repacks=0)
+    capacity_trace: List[tuple] = []
     gang = f"sweep:{tenant}"
+    adaptive_pol = None
+    if adaptive_pack:
+        adaptive_pol = repack_pol
+        if admission is not None and bytes_per_lane > 0:
+            # admission's static cap bounds online growth too (the
+            # measured frontier may later shrink it further)
+            adaptive_pol = dataclasses.replace(
+                adaptive_pol,
+                max_capacity=max(adaptive_pol.min_capacity,
+                                 min(adaptive_pol.max_capacity,
+                                     admission.require_fits(bytes_per_lane))))
 
     # ONE Checkpointer per task for the whole sweep: its save(blocking=
     # False) joins the previous thread, so async saves to a task dir
@@ -256,6 +294,17 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
             if gauges is not None:
                 gauges.on_lane_sample(tenant, gang, active, capacity)
 
+        # one controller PER POOL ATTEMPT: an OOM-backoff retry gets a
+        # fresh cooldown anchor and repack budget (a private gauge set —
+        # the sweep's own on_step already samples the shared ``gauges``
+        # for this gang; sharing them here would double-decay the EWMA)
+        controller = None
+        if adaptive_pol is not None:
+            controller = rp.RepackController(
+                adaptive_pol, hbm_budget=hbm_budget, tenant=tenant,
+                gang=f"repack:{gang}", admission=admission,
+                measure_bytes=measure_bytes)
+
         ex = RefillExecutor(
             pool, on_metrics=on_metrics, on_finish=on_finish,
             on_step_start=mon.start_step, on_step=on_step,
@@ -265,15 +314,28 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
             should_preempt=preempt,
             on_preempt=on_preempt if checkpoint_dir else None,
             speculative=policy.speculative_stragglers,
-            stragglers_fn=stragglers_fn or mon.stragglers)
+            stragglers_fn=stragglers_fn or mon.stragglers,
+            repack_policy=controller)
         try:
             stats = ex.run(queue)
         except PoolStepError:   # pool-wide OOM: halve capacity, redo
                                 # unfinished (callback bugs propagate raw)
-            if policy.oom_backoff and pack > policy.min_pack_factor:
+            if policy.oom_backoff and ex.pool.capacity > policy.min_pack_factor:
                 backoffs += 1
-                pack = max(policy.min_pack_factor, pack // 2)
-                totals["n_traces"] += pool.n_traces
+                # halve from where the pool actually WAS (adaptive repack
+                # may have moved it since dispatch)
+                pack = max(policy.min_pack_factor, ex.pool.capacity // 2)
+                totals["n_traces"] += ex.n_traces
+                if adaptive_pol is not None:
+                    # the retry's fresh controller must not regrow past
+                    # the capacity that just OOM'd, or the halve/regrow
+                    # cycle never terminates — each backoff lowers the
+                    # ceiling, preserving the static path's log2 bound
+                    adaptive_pol = dataclasses.replace(
+                        adaptive_pol,
+                        max_capacity=max(adaptive_pol.min_capacity,
+                                         min(adaptive_pol.max_capacity,
+                                             pack)))
                 # unfinished tasks re-attach via init_fn, which resumes
                 # from their last saved checkpoint (or step 0) and trims
                 # the loss history to match — the failed pool's unsaved
@@ -291,6 +353,10 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
         totals["lane_steps"] += stats.lane_steps
         totals["refills"] += stats.attaches
         totals["n_traces"] += stats.n_traces
+        totals["repacks"] += stats.repacks
+        capacity_trace.extend(stats.capacity_trace)
+        if adaptive_pack:
+            pack = ex.pool.capacity     # report the CONVERGED factor
         if stats.preempted:
             preempted = True            # drained to per-task checkpoints;
                                         # a re-run resumes every cursor
@@ -311,4 +377,6 @@ def run_sweep(model: Model, tasks: Sequence[SweepTask], *,
                        lane_steps=totals["lane_steps"],
                        refills=totals["refills"],
                        n_traces=totals["n_traces"],
-                       preempted=preempted)
+                       preempted=preempted,
+                       repacks=totals["repacks"],
+                       capacity_trace=capacity_trace)

@@ -1,0 +1,474 @@
+"""Online elastic repacking (core/repack.py, DESIGN.md §9): policy
+decisions, controller telemetry, executor mid-run capacity changes with
+bit-identical results, grown-capacity rehydrate, adaptive sweeps,
+measured-footprint admission, simulator pricing."""
+from dataclasses import replace as dataclasses_replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import simulate as S
+from repro.core import tenancy as ten
+from repro.core import triples as T
+from repro.core.lanepool import (LanePool, LaneTask, RefillExecutor,
+                                 rehydrate)
+from repro.core.repack import RepackController, RepackPolicy
+from tests.prop import given_cases
+
+
+# ---------------------------------------------------------------------------
+# tiny-model harness (same shapes as test_lanepool)
+# ---------------------------------------------------------------------------
+
+def _setup():
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (8, 16)) * 0.1,
+                "w2": jax.random.normal(k2, (16, 4)) * 0.1}
+
+    def loss(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"])
+        return jnp.mean((h @ params["w2"] - batch["y"]) ** 2)
+
+    opt = optim.sgd()
+
+    def step(params, opt_state, batch, lr):
+        l, g = jax.value_and_grad(loss)(params, batch)
+        upd, opt_state = opt.update(g, opt_state, params, lr)
+        return optim.apply_updates(params, upd), opt_state, {"loss": l}
+
+    return init, opt, step
+
+
+def _batch(seed, step, n=16):
+    rng = np.random.Generator(np.random.Philox(key=seed,
+                                               counter=[step, 0, 0, 0]))
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    return {"x": x, "y": (x[:, :4] * 0.5).astype(np.float32)}
+
+
+def _pool(step, init, opt, capacity):
+    tmpl = init(jax.random.PRNGKey(0))
+    return LanePool(capacity, step, template_params=tmpl,
+                    template_opt=opt.init(tmpl),
+                    template_hparams=jnp.float32(0.0))
+
+
+def _lane_task(init, opt, i, steps):
+    return LaneTask(
+        id=i, hparams=jnp.float32(1e-2),
+        init_fn=lambda i=i: (lambda p: (p, opt.init(p)))(
+            init(jax.random.PRNGKey(i))),
+        batch_fn=lambda s, i=i: _batch(i, s),
+        steps=steps)
+
+
+def _collect(ex, tasks):
+    losses = {}
+    ex.on_metrics = lambda t, s, m: losses.setdefault(t.id, []).append(
+        float(np.asarray(m["loss"]))) and False
+    stats = ex.run(tasks)
+    return losses, stats
+
+
+def _identical(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert np.float32(a[k]).tolist() == np.float32(b[k]).tolist(), k
+
+
+# ---------------------------------------------------------------------------
+# RepackPolicy: the pure decision rule
+# ---------------------------------------------------------------------------
+
+def test_policy_grow_requires_saturation_queue_and_headroom():
+    pol = RepackPolicy(grow_occupancy=0.8, shrink_occupancy=0.3,
+                       grow_factor=2.0, max_capacity=16)
+    # saturated + queued -> double
+    assert pol.propose(capacity=4, occupancy=0.9, queued=10, active=4) == 8
+    # no queued work: nothing to grow FOR
+    assert pol.propose(capacity=4, occupancy=0.9, queued=0, active=4) is None
+    # dead band between the thresholds: stand pat
+    assert pol.propose(capacity=4, occupancy=0.6, queued=10,
+                       active=4) is None
+    # growth never exceeds demand (active + queued)
+    assert pol.propose(capacity=4, occupancy=0.95, queued=1, active=4) == 5
+    # growth clamped by the measured frontier
+    assert pol.propose(capacity=4, occupancy=0.95, queued=20, active=4,
+                       bytes_per_lane=2.0, hbm_budget=13.5) == 6
+    # frontier at/below current: grow denied outright
+    assert pol.propose(capacity=6, occupancy=0.95, queued=20, active=6,
+                       bytes_per_lane=2.0, hbm_budget=13.5) is None
+
+
+def test_policy_shrink_and_oom_guard():
+    pol = RepackPolicy(grow_occupancy=0.8, shrink_occupancy=0.4,
+                       grow_factor=2.0, min_capacity=1)
+    # sagging occupancy: halve, but never below the live lane count
+    assert pol.propose(capacity=8, occupancy=0.2, queued=0, active=2) == 4
+    assert pol.propose(capacity=8, occupancy=0.2, queued=0, active=6) == 6
+    assert pol.propose(capacity=1, occupancy=0.0, queued=0, active=0) is None
+    # OOM guard: measured footprint pushed the frontier below capacity —
+    # shrink to the frontier regardless of occupancy
+    assert pol.propose(capacity=8, occupancy=1.0, queued=5, active=8,
+                       bytes_per_lane=6.0, hbm_budget=16.0) == 2
+    # frontier 0 clamps to min_capacity
+    assert pol.propose(capacity=4, occupancy=1.0, queued=5, active=4,
+                       bytes_per_lane=100.0, hbm_budget=16.0) == 1
+    # the guard only ever SHRINKS: a min_capacity at/above the current
+    # capacity must not grow a pool that is already past the frontier
+    pinned = RepackPolicy(min_capacity=4, max_capacity=8,
+                          grow_occupancy=0.8, shrink_occupancy=0.4)
+    assert pinned.propose(capacity=2, occupancy=1.0, queued=5, active=2,
+                          bytes_per_lane=16.0, hbm_budget=16.0) is None
+    assert pinned.propose(capacity=4, occupancy=1.0, queued=5, active=4,
+                          bytes_per_lane=16.0, hbm_budget=16.0) is None
+
+
+def test_policy_frontier_matches_admission_formula():
+    pol = RepackPolicy(headroom=0.9, max_capacity=64)
+    adm = ten.MemoryAdmission(T.NodeSpec(hbm_per_chip=16e9), headroom=0.9)
+    for bpl in (1.5e9, 4e9, 7e9):
+        assert pol.frontier(bpl, 16e9) == adm.max_pack(bpl)
+    assert pol.frontier(0.0, 16e9) == pol.max_capacity   # unmeasured
+    assert pol.frontier(1.0, None) == pol.max_capacity   # no budget
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RepackPolicy(grow_occupancy=0.4, shrink_occupancy=0.5)
+    with pytest.raises(ValueError):
+        RepackPolicy(grow_factor=1.0)
+    with pytest.raises(ValueError):
+        RepackPolicy(min_capacity=8, max_capacity=4)
+    with pytest.raises(ValueError):
+        RepackPolicy(headroom=0.0)
+
+
+# ---------------------------------------------------------------------------
+# RepackController: telemetry, cooldown, thrash bound
+# ---------------------------------------------------------------------------
+
+def test_controller_cooldown_and_thrash_bound():
+    pol = RepackPolicy(grow_occupancy=0.5, shrink_occupancy=0.1,
+                       cooldown_steps=4, max_capacity=64, max_repacks=2)
+    ctl = RepackController(pol, measure_bytes=lambda: 0)
+    for s in range(3):
+        ctl.observe(s, 2, 2, 10)
+    assert ctl.decide(3, 2, 10, 2) == 4          # saturated: grow
+    ctl.observe(4, 4, 4, 8)
+    assert ctl.decide(4, 4, 8, 4) is None        # cooldown
+    for s in range(5, 8):
+        ctl.observe(s, 4, 4, 8)
+    assert ctl.decide(7, 4, 8, 4) == 8           # cooldown elapsed
+    for s in range(8, 16):
+        ctl.observe(s, 8, 8, 4)
+    assert ctl.decide(15, 8, 4, 8) is None       # max_repacks reached
+    assert ctl.repacks == 2
+    assert [e.reason for e in ctl.events] == ["grow", "grow"]
+    assert ctl.capacity_trace() == [(3, 4), (7, 8)]
+
+
+def test_controller_oom_guard_overrides_cooldown():
+    mem = {"per_lane": 1.0}
+    pol = RepackPolicy(grow_occupancy=0.5, shrink_occupancy=0.1,
+                       cooldown_steps=100, max_capacity=8)
+    ctl = RepackController(pol, hbm_budget=16.0,
+                           measure_bytes=lambda: mem["per_lane"] * 4)
+    ctl.observe(0, 4, 4, 6)
+    assert ctl.decide(0, 4, 6, 4) == 8           # grow (within frontier)
+    mem["per_lane"] = 6.0                        # phase change
+    ctl.observe(1, 4, 4, 6)
+    # cooldown (100) has NOT elapsed, but the frontier (2) is below the
+    # capacity: the guard shrinks anyway
+    assert ctl.decide(1, 4, 6, 4) == 2
+    assert ctl.events[-1].reason == "oom-guard"
+
+
+def test_controller_reports_measured_bytes_to_admission():
+    adm = ten.MemoryAdmission(T.NodeSpec(hbm_per_chip=16.0), headroom=0.9)
+    pol = RepackPolicy(grow_occupancy=0.5, shrink_occupancy=0.1,
+                       cooldown_steps=1, max_capacity=8)
+    ctl = RepackController(pol, hbm_budget=16.0, tenant="alice",
+                           admission=adm, measure_bytes=lambda: 8.0)
+    ctl.observe(0, 2, 2, 6)                      # 4.0 bytes per lane
+    assert ctl.decide(0, 2, 6, 2) == 3           # grow to frontier 3
+    assert adm.measured["alice"] == pytest.approx(4.0)
+    assert adm.effective_bytes("alice", 1.0) == pytest.approx(4.0)
+    assert adm.effective_bytes("bob", 1.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# executor: mid-run capacity changes, bit-identical results
+# ---------------------------------------------------------------------------
+
+BUDGETS = [3, 7, 4, 6, 2, 5, 8, 3, 5, 4]
+
+
+def _mk_tasks(init, opt):
+    return [_lane_task(init, opt, i, b) for i, b in enumerate(BUDGETS)]
+
+
+def test_executor_grow_and_shrink_bit_identical():
+    init, opt, step = _setup()
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 2)),
+                       _mk_tasks(init, opt))
+    ctl = RepackController(RepackPolicy(
+        grow_occupancy=0.5, shrink_occupancy=0.3, cooldown_steps=2,
+        max_capacity=8), measure_bytes=lambda: 0)
+    got, stats = _collect(
+        RefillExecutor(_pool(step, init, opt, 2), repack_policy=ctl),
+        _mk_tasks(init, opt))
+    _identical(base, got)
+    assert stats.repacks >= 1
+    assert stats.capacity_trace == ctl.capacity_trace()
+    # one jit trace per distinct capacity, summed across pools
+    assert stats.n_traces == len({2} | {c for _, c in stats.capacity_trace})
+    assert stats.lane_steps == sum(BUDGETS)
+
+
+def test_executor_accepts_bare_policy():
+    """repack_policy= may be a RepackPolicy; the executor wraps it in a
+    private controller."""
+    init, opt, step = _setup()
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 2)),
+                       _mk_tasks(init, opt))
+    got, stats = _collect(
+        RefillExecutor(_pool(step, init, opt, 2),
+                       repack_policy=RepackPolicy(
+                           grow_occupancy=0.5, shrink_occupancy=0.0,
+                           cooldown_steps=1, max_capacity=4)),
+        _mk_tasks(init, opt))
+    _identical(base, got)
+    assert stats.repacks >= 1
+
+
+def test_executor_oom_guard_shrinks_before_frontier_crossed():
+    """Scripted footprint jump mid-run: the pool must shrink to the new
+    frontier without ever STEPPING over the raw budget."""
+    init, opt, step = _setup()
+    budget = 16.0
+    mem = {"per_lane": 1.0}
+    cell = {"cap": 4, "over_budget_steps": 0}
+
+    def on_step(g, active, cap):
+        cell["cap"] = cap
+        if cap * mem["per_lane"] > budget:
+            cell["over_budget_steps"] += 1
+        if g == 2:                      # phase change after step 2
+            mem["per_lane"] = 6.0
+
+    # max_capacity == current capacity: voluntary grow/shrink cannot
+    # fire, so the ONLY possible repack is the frontier guard
+    ctl = RepackController(
+        RepackPolicy(grow_occupancy=1.0, shrink_occupancy=0.0,
+                     cooldown_steps=1, max_capacity=4),
+        hbm_budget=budget,
+        measure_bytes=lambda: mem["per_lane"] * cell["cap"])
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, 4)),
+                       _mk_tasks(init, opt))
+    got, stats = _collect(
+        RefillExecutor(_pool(step, init, opt, 4), on_step=on_step,
+                       repack_policy=ctl),
+        _mk_tasks(init, opt))
+    _identical(base, got)
+    assert stats.repacks == 1
+    assert ctl.events[0].reason == "oom-guard"
+    assert stats.capacity_trace[0][1] == 2       # frontier at 6.0 B/lane
+    assert cell["over_budget_steps"] == 0
+
+
+def test_repack_resume_closure_restores_original_init_fn():
+    """The drain-time live-state closure is ONE-SHOT: once consumed at
+    re-attach, the task's own init_fn is back in place — a later re-init
+    (OOM-backoff restart) must go through the original restore path, not
+    resurrect stale drain-time state."""
+    init, opt, step = _setup()
+    tasks = _mk_tasks(init, opt)
+    originals = {t.id: t.init_fn for t in tasks}
+    ctl = RepackController(RepackPolicy(
+        grow_occupancy=0.5, shrink_occupancy=0.3, cooldown_steps=1,
+        max_capacity=8), measure_bytes=lambda: 0)
+    _, stats = _collect(
+        RefillExecutor(_pool(step, init, opt, 2), repack_policy=ctl), tasks)
+    assert stats.repacks >= 1
+    for t in tasks:
+        assert t.init_fn is originals[t.id], t.id
+
+
+def test_controller_cooldown_self_heals_on_step_regression():
+    """A controller reused across executor runs (OOM-backoff retry) sees
+    the step counter restart at 0; a stale cooldown anchor must not jam
+    voluntary repacks shut for the new run's first N steps."""
+    pol = RepackPolicy(grow_occupancy=0.5, shrink_occupancy=0.1,
+                       cooldown_steps=8, max_capacity=64)
+    ctl = RepackController(pol, measure_bytes=lambda: 0)
+    ctl.observe(50, 2, 2, 10)
+    assert ctl.decide(50, 2, 10, 2) == 4         # repack anchored at 50
+    ctl.observe(0, 2, 2, 10)                     # NEW run, step 0
+    assert ctl.decide(0, 2, 10, 2) == 4          # not blocked until 58
+
+
+# ---------------------------------------------------------------------------
+# property: rehydrate at a GROWN capacity is bit-identical (the safety
+# basis for repack-grow; PR 3 only covered original and halved)
+# ---------------------------------------------------------------------------
+
+@given_cases(n=6, seed=11)
+def test_rehydrate_grown_capacity_bit_identical(rng):
+    init, opt, step = _setup()
+    cap = int(rng.integers(2, 4))
+    grown = cap + int(rng.integers(1, 5))
+    n_tasks = int(rng.integers(cap + 1, 9))
+    budgets = [int(rng.integers(1, 7)) for _ in range(n_tasks)]
+    drain_at = int(rng.integers(1, max(2, sum(budgets) // cap)))
+    mk = lambda: [_lane_task(init, opt, i, b)
+                  for i, b in enumerate(budgets)]
+
+    base, _ = _collect(RefillExecutor(_pool(step, init, opt, cap)), mk())
+    ex = RefillExecutor(_pool(step, init, opt, cap),
+                        should_preempt=lambda st: st.global_steps
+                        >= drain_at)
+    part, stats = _collect(ex, mk())
+    if not stats.preempted:             # whole run fit before the trigger
+        _identical(base, part)
+        return
+    resumed, stats2 = _collect(
+        RefillExecutor(_pool(step, init, opt, grown)),
+        rehydrate(ex.snapshot, mk()))
+    assert not stats2.preempted
+    for i, b in enumerate(budgets):
+        full = part.get(i, []) + resumed.get(i, [])
+        assert np.float32(full).tolist() == \
+            np.float32(base[i]).tolist(), (i, cap, grown, drain_at)
+        assert len(full) == b
+
+
+# ---------------------------------------------------------------------------
+# sweep: adaptive_pack converges online, losses unchanged
+# ---------------------------------------------------------------------------
+
+def _lm_fixture():
+    from repro import configs
+    from repro.models import ParallelCtx, build_model
+    model = build_model(configs.get("stablelm-1.6b").reduced(),
+                        ParallelCtx(moe_oracle=True))
+
+    def batch_fn(seed, step):
+        from repro.data import SyntheticLM
+        ds = SyntheticLM(vocab_size=model.cfg.vocab_size, seq_len=16,
+                         batch_size=2, seed=seed)
+        return ds.batch(step)
+
+    return model, batch_fn
+
+
+def test_run_sweep_adaptive_pack_converges_bit_identical():
+    from repro.launch.sweep import SweepTask, run_sweep
+    model, batch_fn = _lm_fixture()
+    tasks = lambda: [SweepTask(id=i, lr=1e-3, seed=i) for i in range(6)]
+    base = run_sweep(model, tasks(), batch_fn=batch_fn, steps=4, max_pack=6)
+    ad = run_sweep(model, tasks(), batch_fn=batch_fn, steps=4, max_pack=6,
+                   adaptive_pack=True,
+                   repack_policy=RepackPolicy(
+                       start_capacity=2, grow_occupancy=0.5,
+                       shrink_occupancy=0.1, cooldown_steps=1,
+                       max_capacity=6))
+    for i in range(6):
+        assert np.float32(ad.losses[i]).tolist() == \
+            np.float32(base.losses[i]).tolist(), i
+    assert ad.repacks >= 1              # 2 -> ... -> 6 online
+    assert ad.capacity_trace[-1][1] == ad.pack_factor == 6
+    assert ad.lane_steps == base.lane_steps
+
+
+# ---------------------------------------------------------------------------
+# scheduler admission consumes MEASURED footprints after a repack event
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admission_uses_measured_footprint():
+    from repro.core.scheduler import (ClusterState, Task, Tenancy,
+                                      TriplesScheduler)
+    spec = T.NodeSpec(chips_per_node=4, hbm_per_chip=16e9)
+    trip = T.Triples(1, 16, 1)          # pack_factor 4
+
+    def fresh():
+        cl = ClusterState(2, spec)
+        return TriplesScheduler(cl, tenancy=Tenancy.create(node_spec=spec))
+
+    tasks = lambda: [Task(id=i, fn=lambda ctx: 0) for i in range(4)]
+    # static profile says 3 GB/lane -> pack 4 fits the 0.9*16 GB budget
+    sched = fresh()
+    ok = sched.submit("u", tasks(), trip, bytes_per_lane=3e9)
+    assert ok.state != "rejected"
+    # a repack event measured 5 GB/lane: the same submit is now rejected —
+    # admission trusts telemetry over the stale profile
+    sched2 = fresh()
+    sched2.tenancy.admission.record_measured("u", 5e9)
+    rej = sched2.submit("u", tasks(), trip, bytes_per_lane=3e9)
+    assert rej.state == "rejected"
+    assert "exceeds footprint cap" in rej.reject_reason
+    # measurements only TIGHTEN: a smaller measurement (possibly from a
+    # DIFFERENT job of the same tenant) must not relax a pessimistic
+    # static profile into an OOM
+    sched3 = fresh()
+    sched3.tenancy.admission.record_measured("u", 3e9)
+    still = sched3.submit("u", tasks(), trip, bytes_per_lane=9e9)
+    assert still.state == "rejected"
+    assert still.bytes_per_lane == pytest.approx(9e9)
+    # ...but a measurement fills in an UNKNOWN static profile
+    sched4 = fresh()
+    sched4.tenancy.admission.record_measured("u", 5e9)
+    filled = sched4.submit("u", tasks(), trip, bytes_per_lane=0.0)
+    assert filled.state == "rejected"
+    assert filled.bytes_per_lane == pytest.approx(5e9)
+
+
+# ---------------------------------------------------------------------------
+# simulator: repack pricing in compare_modes
+# ---------------------------------------------------------------------------
+
+def test_sim_repack_duration_ladder():
+    spec = T.NodeSpec()
+    pol = RepackPolicy(start_capacity=1, grow_factor=2.0,
+                       repack_latency_s=3.0)
+    job = S.SimJob(id=0, user="u", submit_t=0.0, kind="sweep",
+                   n_tasks=64, task_s=2.0,
+                   trip=T.Triples(1, 2 * spec.chips_per_node, 1),
+                   bytes_per_lane=1.5e9)
+    eff = job.trip                      # pack_factor 2, 8 slots
+    d_static = S.job_duration(job, eff, spec, 0.15)
+    d_adapt, nrep = S.repack_duration(job, eff, spec, 0.15, pol)
+    # the ramp costs: one wave at half width + a priced repack
+    assert nrep == 1
+    assert d_adapt > d_static
+    # ladder math: wave at pack 1 (4 slots, 2.0s) + latency, then the
+    # remaining 60 tasks in ceil(60/8)=8 waves at pack-2 speed (2.3s)
+    assert d_adapt == pytest.approx(2.0 + 3.0 + 8 * 2.3)
+    # a job that finishes during the ramp never pays for a resize it
+    # never performed
+    tiny = dataclasses_replace(job, n_tasks=3)
+    d_tiny, nrep_tiny = S.repack_duration(tiny, eff, spec, 0.15, pol)
+    assert nrep_tiny == 0
+    assert d_tiny == pytest.approx(2.0)          # one pack-1 wave, no latency
+
+
+def test_sim_compare_modes_prices_repack_deterministically():
+    jobs = S.mixed_workload()
+    pol = RepackPolicy(start_capacity=2, repack_latency_s=1.0)
+    out = S.compare_modes(jobs, 8, repack=pol)
+    assert set(out) >= {"exclusive", "shared", "shared+repack"}
+    rep = out["shared+repack"]
+    assert rep.repacks > 0
+    # the ramp is PRICED: adaptive convergence cannot beat the static
+    # oracle that was granted the full pack up front
+    assert rep.makespan >= out["shared"].makespan
+    again = S.simulate(jobs, 8, mode="shared",
+                       admission=ten.MemoryAdmission(T.NodeSpec()),
+                       repack=pol)
+    assert again.makespan == rep.makespan
+    assert again.repacks == rep.repacks
+    assert S.comparison_table(out)      # renders

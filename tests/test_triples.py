@@ -41,6 +41,50 @@ def test_plan_properties(rng):
     assert p.pack_factor == max(1, math.ceil(nppn * ntpp / chips))
     assert trip.is_sharing(spec) == (nppn * ntpp > chips)
 
+    # 6. pack_lane unique per (node, chip): co-resident slots on one chip
+    # must occupy distinct lanes, and the lane count per chip must match
+    # chip_load() exactly (regression: the old (j*ntpp)//cpn arithmetic
+    # collided when ntpp did not divide chips_per_node)
+    lanes_on_chip = {}
+    for s in p.slots:
+        for c in s.chips:
+            lanes = lanes_on_chip.setdefault((s.node, c), set())
+            assert s.pack_lane not in lanes, (
+                f"pack_lane {s.pack_lane} duplicated on chip {(s.node, c)}")
+            lanes.add(s.pack_lane)
+    for key, lanes in lanes_on_chip.items():
+        assert len(lanes) == load[key]
+
+
+def test_pack_lane_no_collision_when_ntpp_wraps_chip_groups():
+    """cpn=4, nppn=4, ntpp=3: chip groups wrap ((0,1,2), (3,0,1), (2,3,0),
+    (1,2,3)); the old (j*ntpp)//cpn lane gave slots 0 and 1 the same lane 0
+    while they share chips 0 and 1. Lanes must be unique per (node, chip)
+    and agree with chip_load()."""
+    spec = T.NodeSpec(chips_per_node=4)
+    p = T.plan(8, T.Triples(1, 4, 3), spec)
+    lanes_on_chip = {}
+    for s in p.slots:
+        for c in s.chips:
+            lanes = lanes_on_chip.setdefault((s.node, c), set())
+            assert s.pack_lane not in lanes, (
+                f"slot {s.slot} reuses lane {s.pack_lane} on chip {c}")
+            lanes.add(s.pack_lane)
+    load = p.chip_load()
+    assert {k: len(v) for k, v in lanes_on_chip.items()} == load
+    # lane ids stay bounded by the slot count (greedy coloring bound)
+    assert max(s.pack_lane for s in p.slots) < 4
+
+
+def test_pack_lane_matches_arithmetic_when_ntpp_divides_cpn():
+    """Non-wrapping case: lane derivation reduces to the original
+    (j*ntpp)//cpn assignment (no behavior change for aligned groups)."""
+    spec = T.NodeSpec(chips_per_node=4)
+    for nppn, ntpp in [(8, 1), (4, 2), (2, 4), (16, 1)]:
+        p = T.plan(nppn, T.Triples(1, nppn, ntpp), spec)
+        for s in p.slots:
+            assert s.pack_lane == (s.slot * ntpp) // 4
+
 
 def test_paper_mnist_table1():
     """Table I: 2-GPU node, NPPN from 1..24, NTPP keeps cores bounded."""
