@@ -1,0 +1,189 @@
+"""Spatial slice-sharing vs temporal modes on an interference-heavy mix
+(DESIGN.md §10).
+
+Triples packing time-shares chips, so a memory-bound job's co-resident
+lanes thrash each other's HBM bandwidth — the interference tax the flat
+``pack_slowdown`` model understates. This benchmark replays a mix built
+to expose it (memory-bound serve jobs at deep pack + compute-bound
+sweeps) and shows the interference-aware mode planner beating BOTH
+all-triples and all-exclusive, two ways:
+
+1. **Simulated replay** — ``compare_modes(..., spatial=planner)`` adds
+   the ``shared+spatial`` report: under contention the planner
+   partitions nodes into isolated slices (priced partition-reconfigure
+   latency included). Asserted: strictly better makespan than
+   ``shared`` (all-triples) AND ``exclusive``, with ZERO admission
+   rejections or OOMs — the slice veto keeps every placement inside its
+   HBM fraction.
+
+2. **Live scheduler** — three tenants' memory-bound gangs run
+   CONCURRENTLY in slices of one node (the whole-node policy's one
+   sanctioned exception), and a gang drained from whole-node lanes
+   rehydrates on slices with per-task results identical to an
+   uninterrupted run (the lanes↔slices round trip; the reverse
+   direction is pinned by tests/test_spatial.py).
+
+Run with ``--smoke`` for the CI-sized variant.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, write_json
+from repro.core import simulate as S
+from repro.core import spatial as sp
+from repro.core import tenancy as ten
+from repro.core import triples as T
+from repro.core.monitor import TenantGauges
+from repro.core.scheduler import ClusterState, Task, Tenancy, TriplesScheduler
+
+N_NODES = 3
+SPEC = T.NodeSpec()
+
+
+def interference_mix(n_serve: int = 8, n_sweep: int = 4):
+    """Memory-bound serve jobs (deep pack, intensity 0.8) from three
+    tenants + compute-bound sweeps (intensity 0.05) from a fourth."""
+    cpn = SPEC.chips_per_node
+    jobs = []
+    jid = 0
+    for i in range(n_serve):
+        jobs.append(S.SimJob(
+            id=jid, user=["ana", "bo", "cy"][i % 3], submit_t=2.0 * i,
+            kind="serve", n_tasks=4 * cpn, task_s=4.0,
+            trip=T.Triples(1, 4 * cpn, 1), bytes_per_lane=2e9,
+            load_frac=0.4, interference=0.8))
+        jid += 1
+    for i in range(n_sweep):
+        jobs.append(S.SimJob(
+            id=jid, user="dee", submit_t=1.0 + 3.0 * i, kind="sweep",
+            n_tasks=8 * cpn, task_s=1.0, trip=T.Triples(1, 4 * cpn, 1),
+            bytes_per_lane=1.5e9, load_frac=0.25, interference=0.05))
+        jid += 1
+    return jobs
+
+
+def run_simulated():
+    jobs = interference_mix()
+    planner = sp.ModePlanner(SPEC, ten.MemoryAdmission(SPEC),
+                             reconfig_latency_s=2.0)
+    reports = S.compare_modes(jobs, N_NODES, SPEC, spatial=planner)
+    print(S.comparison_table(reports))
+    ex, sh, spa = (reports["exclusive"], reports["shared"],
+                   reports["shared+spatial"])
+    assert spa.spatial_placements > 0, "the planner must place on slices"
+    assert spa.makespan < sh.makespan, (
+        f"spatial must beat all-triples ({spa.makespan:.0f}s vs "
+        f"{sh.makespan:.0f}s)")
+    assert spa.makespan < ex.makespan, (
+        f"spatial must beat all-exclusive ({spa.makespan:.0f}s vs "
+        f"{ex.makespan:.0f}s)")
+    for name, r in reports.items():
+        assert not r.rejected, f"zero admission OOMs expected in {name}"
+    # the planner routes memory-bound serves to slices, sweeps stay packed
+    assert all(not s.spatial for s in spa.stats if s.job.kind == "sweep")
+    emit("spatial.makespan_vs_triples", spa.makespan,
+         f"vs {sh.makespan:.0f}s all-triples, {ex.makespan:.0f}s "
+         f"all-exclusive ({spa.spatial_placements} slice placements, "
+         f"{spa.reconfigs} reconfigs)")
+    emit("spatial.speedup_vs_triples", sh.makespan / spa.makespan,
+         f"mean wait {sh.mean_wait():.0f}s -> {spa.mean_wait():.0f}s")
+    return reports
+
+
+def run_live_cotenancy(smoke: bool):
+    """Three tenants' memory-bound gangs share ONE node in isolated
+    slices — concurrently, with fractional fair-share charging."""
+    n_tasks = 8 if smoke else 16
+    cl = ClusterState(1, SPEC)
+    gauges = TenantGauges()
+    tn = Tenancy.create(node_spec=SPEC, gauges=gauges,
+                        planner=sp.ModePlanner(SPEC))
+    sched = TriplesScheduler(cl, tenancy=tn)
+
+    def mkjob(user):
+        return [Task(id=i, fn=lambda ctx, u=user, i=i: (u, i))
+                for i in range(n_tasks)]
+
+    jobs = [sched.submit(u, mkjob(u), T.Triples(1, 16, 1),
+                         bytes_per_lane=1e9, interference=0.8)
+            for u in ("ana", "bo", "cy")]
+    done = sched.run_queued()
+    kinds = [e.kind for e in sched.events]
+    assert kinds.count("partition") >= 1
+    assert all(not done[j.id].failed for j in jobs)
+    assert all(done[j.id].wait_rounds == 0 for j in jobs), \
+        "slice co-tenancy must admit all three at once"
+    assert not cl.partitions, "partition must dissolve with its last slice"
+    print(gauges.table())
+    emit("spatial.live_cotenants_per_node", 3,
+         f"{n_tasks} tasks each, zero wait rounds, "
+         f"{kinds.count('spatial_dispatch')} slice dispatches on 1 node")
+    return done
+
+
+def run_live_round_trip(smoke: bool):
+    """A gang preempted OFF whole-node lanes rehydrates ON slices with
+    bit-identical per-task results (the checkpoint is placement-
+    agnostic)."""
+    n_tasks = 64 if smoke else 128      # ≥ 4 rounds of work, so the hog
+                                        # is still running when the
+                                        # waiter crosses wait_threshold
+
+    def mk():
+        return [Task(id=i, fn=lambda ctx, i=i: float(i) * 1.25)
+                for i in range(n_tasks)]
+
+    holder = {}
+
+    def score(p):
+        job = holder["sched"]._jobs.get(p.job_id)
+        return 0.9 if job is not None and job.preemptions > 0 else 0.0
+
+    cl = ClusterState(1, SPEC)
+    tn = Tenancy.create(
+        node_spec=SPEC, planner=sp.ModePlanner(SPEC, interference=score),
+        preemption=ten.PreemptionPolicy(wait_threshold=2,
+                                        elastic_min_frac=1.0))
+    sched = TriplesScheduler(cl, tenancy=tn)
+    holder["sched"] = sched
+    hog = sched.submit("hog", mk(), T.Triples(1, 16, 1), bytes_per_lane=1e9)
+    iris = sched.submit("iris", [Task(id=0, fn=lambda ctx: "iris")],
+                        T.Triples(1, 2, 1))
+    done = sched.run_queued()
+
+    s0 = TriplesScheduler(ClusterState(1, SPEC),
+                          tenancy=Tenancy.create(node_spec=SPEC))
+    ref = s0.submit("hog", mk(), T.Triples(1, 16, 1))
+    r0 = s0.run_queued()[ref.id]
+
+    kinds = [e.kind for e in sched.events]
+    assert "preempt" in kinds and "spatial_dispatch" in kinds
+    assert done[hog.id].preemptions >= 1
+    assert done[hog.id].results == r0.results, \
+        "lanes -> slices rehydrate must be bit-identical"
+    emit("spatial.round_trip_tasks", n_tasks,
+         f"preempted off lanes, resumed on slices, results identical "
+         f"({done[hog.id].preemptions} preemption)")
+    return done
+
+
+def run(smoke: bool = False):
+    reports = run_simulated()
+    run_live_cotenancy(smoke)
+    run_live_round_trip(smoke)
+    write_json("spatial", dict(
+        smoke=smoke,
+        sim={name: dict(makespan=r.makespan, node_util=r.node_util,
+                        eff_util=r.effective_util, throughput=r.throughput,
+                        mean_wait=r.mean_wait(),
+                        spatial_placements=r.spatial_placements,
+                        reconfigs=r.reconfigs)
+             for name, r in reports.items()},
+        spatial_jobs=[s.job.id for s in reports["shared+spatial"].stats
+                      if s.spatial]))
+    return reports
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv[1:])

@@ -2,8 +2,7 @@
 
 Mamba2 backbone with a SHARED attention+FFN block applied periodically
 (weights reused at each application point). For the long_500k cell the
-shared attention uses a 4096-token sliding window (sub-quadratic); see
-DESIGN.md §Arch-applicability.
+shared attention uses a 4096-token sliding window (sub-quadratic).
 """
 from repro.configs.base import ModelConfig, SSMConfig, register
 

@@ -12,6 +12,9 @@ from repro.core.tenancy import (  # noqa: F401
     PendingJob, TenantQuota)
 from repro.core.simulate import (  # noqa: F401
     SimJob, SimReport, compare_modes, comparison_table, mixed_workload)
+from repro.core.spatial import (  # noqa: F401
+    JobProfile, ModePlanner, NodeModePlan, SliceConfig, SliceSpec,
+    ewma_interference, legal_configs)
 from repro.core.monitor import TenantGauges  # noqa: F401
 from repro.core.faults import (  # noqa: F401
     FaultPolicy, NodeDown, TaskCrash, TaskOOM, inject_failures)

@@ -143,6 +143,7 @@ class TenantGauge:
     jobs_rejected: int = 0
     jobs_preempted: int = 0             # gangs checkpointed off their nodes
     jobs_resumed: int = 0               # preempted gangs re-dispatched
+    slices: int = 0                     # spatial slices currently held
     waits: List[float] = dataclasses.field(default_factory=list)
 
 
@@ -164,13 +165,26 @@ class GangLaneGauge:
     samples: int = 0
 
 
+@dataclasses.dataclass
+class SliceGauge:
+    """One allocated spatial slice (core/spatial.py, DESIGN.md §10) —
+    the per-slice row of the operator's LLload table: who holds which
+    fraction of which node, and how many lanes run inside it."""
+    user: str
+    node: int
+    slice_index: int
+    chip_frac: float
+    hbm_frac: float
+    lanes: int
+
+
 class TenantGauges:
     """Per-tenant resource gauges the scheduler updates at dispatch/release.
 
     The paper's workflow is a human watching LLload for ONE job; under
     tenancy an operator needs the same table split by user — who holds
-    which nodes, how many packed lanes, how much HBM, and the fair-share
-    usage each tenant has accumulated."""
+    which nodes, how many packed lanes, how much HBM, how many spatial
+    slices, and the fair-share usage each tenant has accumulated."""
 
     def __init__(self, occupancy_decay: float = 0.7):
         if not 0 < occupancy_decay < 1:
@@ -178,6 +192,7 @@ class TenantGauges:
                 f"occupancy_decay must be in (0, 1), got {occupancy_decay}")
         self._g: Dict[str, TenantGauge] = {}
         self._gangs: Dict[str, GangLaneGauge] = {}
+        self._slices: Dict[tuple, SliceGauge] = {}   # (node, slice) -> gauge
         self.occupancy_decay = occupancy_decay
 
     def gauge(self, user: str) -> TenantGauge:
@@ -212,6 +227,42 @@ class TenantGauges:
     def on_gang_done(self, gang: str):
         """Retire a finished gang's occupancy gauge."""
         self._gangs.pop(gang, None)
+
+    def user_occupancy(self, user: str) -> float:
+        """Highest occupancy-EWMA across this user's live gang gauges —
+        the default interference-intensity signal the spatial mode
+        planner consumes (``spatial.ewma_interference``): a tenant whose
+        lanes run saturated is the tenant whose co-residents contend for
+        the chip's HBM bandwidth. 0.0 when the user has no live gang."""
+        return max((g.occupancy for g in self._gangs.values()
+                    if g.user == user), default=0.0)
+
+    # -------------------------------------------------- per-slice gauges
+    def on_slice_alloc(self, user: str, node: int, slice_index: int,
+                       chip_frac: float, hbm_frac: float, lanes: int = 0):
+        """A spatial slice was granted: one row into the slice table and
+        the holder's slice count."""
+        self._slices[(node, slice_index)] = SliceGauge(
+            user=user, node=node, slice_index=slice_index,
+            chip_frac=chip_frac, hbm_frac=hbm_frac, lanes=lanes)
+        self.gauge(user).slices += 1
+
+    def on_slice_release(self, node: int, slice_index: int):
+        g = self._slices.pop((node, slice_index), None)
+        if g is not None:
+            tg = self.gauge(g.user)
+            tg.slices = max(0, tg.slices - 1)
+
+    def slice_table(self) -> str:
+        """Render the live spatial-partition snapshot (DESIGN.md §10)."""
+        lines = [f"{'NODE':>4s} {'SLICE':>5s} {'TENANT':12s} "
+                 f"{'CHIP%':>6s} {'HBM%':>6s} {'LANES':>5s}"]
+        for key in sorted(self._slices):
+            g = self._slices[key]
+            lines.append(f"{g.node:>4d} {g.slice_index:>5d} {g.user:12s} "
+                         f"{g.chip_frac:>6.1%} {g.hbm_frac:>6.1%} "
+                         f"{g.lanes:>5d}")
+        return "\n".join(lines)
 
     def gang_table(self) -> str:
         """Render the per-gang lane-occupancy snapshot."""
@@ -300,14 +351,14 @@ class TenantGauges:
 
     def table(self) -> str:
         """Render the per-tenant LLload-style snapshot."""
-        lines = [f"{'TENANT':12s} {'NODES':>5s} {'LANES':>5s} "
+        lines = [f"{'TENANT':12s} {'NODES':>5s} {'SLC':>3s} {'LANES':>5s} "
                  f"{'HBM-USED':>10s} {'NODE-TIME':>10s} {'DONE':>4s} "
                  f"{'REJ':>3s} {'PRE':>3s} {'RES':>3s} {'MEAN-WAIT':>9s}"]
         for user in sorted(self._g):
             g = self._g[user]
             mw = sum(g.waits) / len(g.waits) if g.waits else 0.0
             lines.append(
-                f"{user:12s} {g.nodes_held:>5d} {g.lanes:>5d} "
+                f"{user:12s} {g.nodes_held:>5d} {g.slices:>3d} {g.lanes:>5d} "
                 f"{g.resident_bytes/1e9:>8.1f}GB {g.node_time:>10.1f} "
                 f"{g.jobs_done:>4d} {g.jobs_rejected:>3d} "
                 f"{g.jobs_preempted:>3d} {g.jobs_resumed:>3d} {mw:>9.1f}")

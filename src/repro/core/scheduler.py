@@ -26,6 +26,7 @@ import math
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core import spatial
 from repro.core import triples as T
 from repro.core import tenancy as ten
 from repro.core.faults import FaultPolicy, NodeDown, TaskCrash, TaskError, TaskOOM
@@ -53,8 +54,14 @@ class TaskCtx:
     node: int
     slot: int
     chips: Tuple[int, ...]             # CUDA_VISIBLE_DEVICES analogue
-    pack_lane: int
+    pack_lane: int                     # unique per (node, chip) within a
+                                       # gang; across co-resident slice
+                                       # gangs the (chips, slice) pair is
+                                       # the physical address
     ntpp: int                          # OMP_NUM_THREADS analogue
+    slice: Optional[int] = None        # spatial slice hosting this slot
+                                       # (MIG instance handle analogue;
+                                       # None = whole-node modes)
 
 
 @dataclasses.dataclass
@@ -77,26 +84,74 @@ class JobResult:
 
 
 class ClusterState:
-    """Nodes + whole-node ownership."""
+    """Nodes + whole-node ownership (+ optional spatial partitions).
+
+    A node is in exactly one of three states: free, whole-node owned
+    (the LLSC policy — ``owner[node]`` is the user), or PARTITIONED
+    (``partitions[node]`` is a ``spatial.SliceConfig`` and each slice
+    has its own owner in ``slice_owner`` — the one sanctioned exception
+    to single-ownership, because slices are hardware-isolated,
+    DESIGN.md §10). A partitioned node is invisible to whole-node
+    allocation and reverts to free when its last slice releases."""
 
     def __init__(self, n_nodes: int, node_spec: Optional[T.NodeSpec] = None):
         self.n_nodes = n_nodes
         self.node_spec = node_spec or T.NodeSpec()
         self.owner: Dict[int, Optional[str]] = {i: None for i in range(n_nodes)}
         self.down: set = set()
+        self.partitions: Dict[int, object] = {}       # node -> SliceConfig
+        self.slice_owner: Dict[Tuple[int, int], str] = {}
 
     def alive(self) -> List[int]:
         return [i for i in range(self.n_nodes) if i not in self.down]
 
     def free_count(self) -> int:
-        return sum(1 for i in self.alive() if self.owner[i] is None)
+        return sum(1 for i in self.alive()
+                   if self.owner[i] is None and i not in self.partitions)
+
+    # ------------------------------------------------- spatial partitions
+    def free_nodes(self) -> List[int]:
+        """Nodes available to either whole-node allocation or a fresh
+        spatial partition."""
+        return [i for i in self.alive()
+                if self.owner[i] is None and i not in self.partitions]
+
+    def partition_node(self, node: int, config):
+        """Partition a FREE node under ``config`` (spatial.SliceConfig)."""
+        if node in self.down or self.owner[node] is not None \
+                or node in self.partitions:
+            raise RuntimeError(f"node {node} is not free to partition")
+        self.partitions[node] = config
+
+    def allocate_slice(self, user: str, node: int, index: int):
+        if node not in self.partitions:
+            raise RuntimeError(f"node {node} is not partitioned")
+        if (node, index) in self.slice_owner:
+            raise RuntimeError(f"slice ({node}, {index}) already owned")
+        self.slice_owner[(node, index)] = user
+
+    def release_slice(self, node: int, index: int):
+        """Free one slice; the partition dissolves with its last slice."""
+        self.slice_owner.pop((node, index), None)
+        if node in self.partitions and not any(
+                n == node for n, _ in self.slice_owner):
+            del self.partitions[node]
 
     def held_counts(self) -> Dict[str, int]:
-        """Nodes currently held, per user (tenancy quota enforcement)."""
+        """Nodes currently held, per user (tenancy quota enforcement).
+        A partitioned node counts as held — one whole node per user per
+        node they own ANY slice on (conservative: ``max_nodes`` is a
+        hard cap, and a fractional holding must not become a quota
+        bypass)."""
         held: Dict[str, int] = {}
         for i in self.alive():
             u = self.owner[i]
             if u is not None:
+                held[u] = held.get(u, 0) + 1
+        seen = set()
+        for (node, _), u in self.slice_owner.items():
+            if node not in self.down and (node, u) not in seen:
+                seen.add((node, u))
                 held[u] = held.get(u, 0) + 1
         return held
 
@@ -106,8 +161,9 @@ class ClusterState:
         user are reusable (the seed single-job semantics); ``fresh=True``
         demands strictly unowned nodes — required when one user runs
         several concurrent gangs (tenancy path) so they never share."""
-        free = [i for i in self.alive() if self.owner[i] is None
-                or (not fresh and self.owner[i] == user)]
+        free = [i for i in self.alive() if i not in self.partitions
+                and (self.owner[i] is None
+                     or (not fresh and self.owner[i] == user))]
         if len(free) < n:
             return None
         got = free[:n]
@@ -122,6 +178,9 @@ class ClusterState:
     def fail_node(self, node: int):
         self.down.add(node)
         self.owner[node] = None
+        self.partitions.pop(node, None)
+        for key in [k for k in self.slice_owner if k[0] == node]:
+            del self.slice_owner[key]
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +225,10 @@ class GangJob:
     tasks: List[Task]
     trip: T.Triples
     bytes_per_lane: float = 0.0
+    interference: float = 0.0          # declared interference intensity in
+                                       # [0, 1] for the spatial mode planner
+                                       # (0 = compute-bound; telemetry may
+                                       # raise the effective score)
     state: str = "queued"              # queued|running|done|rejected
     reject_reason: str = ""
     result: Optional[JobResult] = None
@@ -189,11 +252,15 @@ class _GangRun:
 
     def __init__(self, sched: "TriplesScheduler", user: str,
                  tasks: List[Task], trip: T.Triples, nodes: List[int],
-                 checkpoint: Optional[GangCheckpoint] = None):
+                 checkpoint: Optional[GangCheckpoint] = None,
+                 slices: Optional[Tuple[object, Tuple[int, ...]]] = None):
         self.sched = sched
         self.user = user
         self.trip = trip
         self.nodes = nodes
+        self.slices = slices            # (SliceConfig, owned indices) when
+                                        # this gang runs INSIDE spatial
+                                        # slices of its node (DESIGN.md §10)
         self.t_start = time.perf_counter()
         self.t_starts: Dict[int, float] = {0: self.t_start}
         self.results: Dict[Tuple[int, int], Any] = {}
@@ -205,7 +272,7 @@ class _GangRun:
         # gang and still running — the admission veto must count them all
         self.adopted_pack: Dict[int, Tuple[int, float]] = {}
         plan = T.plan(len(tasks), trip, sched.cluster.node_spec,
-                      alive_nodes=nodes)
+                      alive_nodes=nodes, slices=slices)
         ids = [t.id for t in tasks]
         self.queues: Dict[T.SlotAssignment, List[Tuple[int, int]]] = {
             s: [(0, ids[i]) for i in s.task_ids] for s in plan.slots}
@@ -230,6 +297,17 @@ class _GangRun:
         """Upper bound on rounds to completion (longest slot queue)."""
         longest = max((len(q) for q in self.queues.values()), default=0)
         return longest + (1 if self.pending_retry else 0)
+
+    def node_weight(self) -> float:
+        """Node-equivalents this gang occupies per round — what fair-share
+        charging bills. Whole-node gangs pay ``nnode``; a slice-hosted
+        gang pays only the chip fraction of the slices it holds (the
+        index tuple repeats an index per lane — count each slice once)."""
+        if self.slices is None:
+            return float(self.trip.nnode)
+        config, indices = self.slices
+        return float(sum(config.slices[i].chip_frac
+                         for i in dict.fromkeys(indices)))
 
     # ------------------------------------------------- lane-level backfill
     def free_slot_count(self) -> int:
@@ -306,7 +384,8 @@ class _GangRun:
         for q in self.queues.values():
             outstanding.extend(q)
         replanned = T.plan(len(outstanding), self.trip,
-                           cluster.node_spec, alive_nodes=alive)
+                           cluster.node_spec, alive_nodes=alive,
+                           slices=self.slices)
         self.sched._log("replan", tasks=list(outstanding), nodes=alive)
         remap = {i: key for i, key in enumerate(outstanding)}
         self.pending_retry = []
@@ -345,6 +424,19 @@ class _GangRun:
 
     def release(self):
         cluster = self.sched.cluster
+        if self.slices is not None:     # slice-hosted: free our slices only
+            _, raw = self.slices
+            indices = tuple(dict.fromkeys(raw))   # de-weight repeats
+            node = self.nodes[0]
+            tn = self.sched.tenancy
+            for i in indices:
+                if node not in cluster.down:
+                    cluster.release_slice(node, i)
+                if tn is not None and tn.gauges is not None:
+                    tn.gauges.on_slice_release(node, i)
+            self.sched._log("release_slices", node=node,
+                            slices=list(indices))
+            return
         cluster.release([n for n in self.nodes if n not in cluster.down])
         self.sched._log("release", nodes=self.nodes)
 
@@ -365,6 +457,8 @@ class Tenancy:
     admission: Optional[ten.MemoryAdmission] = None
     gauges: Optional["TenantGauges"] = None    # core.monitor.TenantGauges
     preemption: Optional[ten.PreemptionPolicy] = None
+    planner: Optional[spatial.ModePlanner] = None   # spatial mode planner
+                                                    # (DESIGN.md §10)
 
     @classmethod
     def create(cls, quotas: Optional[Dict[str, ten.TenantQuota]] = None,
@@ -372,14 +466,27 @@ class Tenancy:
                admission_headroom: float = 0.9,
                half_life: Optional[float] = None,
                gauges: Optional["TenantGauges"] = None,
-               preemption: Optional[ten.PreemptionPolicy] = None
+               preemption: Optional[ten.PreemptionPolicy] = None,
+               planner: Optional[spatial.ModePlanner] = None
                ) -> "Tenancy":
         acct = ten.FairShareAccountant(quotas, half_life=half_life)
         adm = ten.MemoryAdmission(node_spec, headroom=admission_headroom) \
             if node_spec is not None else ten.MemoryAdmission(
                 headroom=admission_headroom)
+        if planner is not None and planner.admission is not adm:
+            # one admission object end-to-end: the planner's slice caps
+            # and submit's pack caps must read the same measured
+            # footprints, or the two frontiers drift apart
+            planner = spatial.ModePlanner(
+                adm.node_spec, adm,
+                base_slowdown=planner.base_slowdown,
+                reconfig_latency_s=planner.reconfig_latency_s,
+                max_pack_per_chip=planner.max_pack_per_chip,
+                min_grant_frac=planner.min_grant_frac,
+                configs=planner.configs,
+                interference=planner.interference)
         return cls(queue=ten.JobQueue(acct), admission=adm, gauges=gauges,
-                   preemption=preemption)
+                   preemption=preemption, planner=planner)
 
     @property
     def accountant(self) -> ten.FairShareAccountant:
@@ -483,7 +590,8 @@ class TriplesScheduler:
 
     # ----------------------------------------------------- multi-tenant path
     def submit(self, user: str, tasks: List[Task], trip: T.Triples,
-               bytes_per_lane: float = 0.0) -> GangJob:
+               bytes_per_lane: float = 0.0,
+               interference: float = 0.0) -> GangJob:
         """Enqueue a gang job for the fair-share queue (requires tenancy).
 
         Memory-aware admission runs HERE — an over-footprint pack_factor is
@@ -503,7 +611,8 @@ class TriplesScheduler:
         if adm is not None:
             bytes_per_lane = adm.effective_bytes(user, bytes_per_lane)
         job = GangJob(id=self._next_job_id, user=user, tasks=tasks,
-                      trip=trip, bytes_per_lane=bytes_per_lane)
+                      trip=trip, bytes_per_lane=bytes_per_lane,
+                      interference=interference)
         self._next_job_id += 1
         self._jobs[job.id] = job
         if trip.nnode > self.cluster.n_nodes:
@@ -554,6 +663,113 @@ class TriplesScheduler:
 
         return admit
 
+    # ------------------------------------------------------ spatial phase
+    def _spatial_dispatch(self, st: _RQState):
+        """Mode-planned spatial dispatch (DESIGN.md §10): consult the
+        mode planner for queued single-node jobs; if isolation wins,
+        partition a free node into slices — single-job isolation on a
+        quiet cluster (a memory-bound job's OWN lanes stop thrashing
+        each other), co-tenant grouping only under contention, and
+        never past an EASY head reservation or a tenant's ``max_nodes``
+        (the selection policy is ``spatial.select_spatial_group``,
+        shared with the simulator). Runs before the whole-node phase
+        each round.
+
+        A job carrying a GangCheckpoint rehydrates on its slices exactly
+        as it would on whole-node lanes — the checkpoint is
+        placement-agnostic (results + remaining cursors), which is what
+        makes the lanes↔slices round trip bit-identical."""
+        tn = self.tenancy
+        planner = tn.planner
+        if planner is None or not len(tn.queue):
+            return
+        max_group = planner.max_group
+        skipped: set = set()
+        while True:
+            free = self.cluster.free_nodes()
+            group, avail = spatial.select_spatial_group(
+                tn.queue.ordered(), len(free), self.cluster.held_counts(),
+                lambda u: tn.accountant.quota(u).max_nodes,
+                max_group, skipped,
+                eligible_fn=lambda pj: isinstance(pj.payload, GangJob))
+            if not group:
+                return
+            k = len(group)
+            profiles = []
+            for pj in group:
+                job: GangJob = pj.payload
+                intensity = job.interference
+                if tn.gauges is not None:  # telemetry may raise the score
+                    intensity = max(intensity,
+                                    tn.gauges.user_occupancy(job.user))
+                profiles.append(spatial.JobProfile(
+                    job_id=job.id, user=job.user,
+                    n_tasks=pj.n_tasks or len(job.tasks) or 1,
+                    bytes_per_lane=pj.bytes_per_lane,
+                    intensity=min(1.0, intensity),
+                    want_lanes=pj.n_slots or len(job.tasks) or 1))
+            decision = planner.plan_node(profiles)
+            if decision.mode != "spatial":
+                if k == 1:              # this job prefers temporal: let it
+                    skipped.add(group[0].id)    # dispatch, try the next
+                else:                   # group vetoed (e.g. min_grant_frac)
+                    max_group = 1       # — still try single-job isolation
+                continue
+            node = free[0]
+            self.cluster.partition_node(node, decision.config)
+            self._alloc_cycles += 1
+            self._log("partition", node=node, config=decision.config.name,
+                      jobs=[pj.id for pj in group])
+            for pj in tn.queue.take([p.id for p in group]):
+                job = pj.payload
+                # expand per-slice lane counts into one index entry per
+                # lane, so the plan puts EXACTLY the admitted number of
+                # slots on each slice (an admission-capped small slice
+                # must never receive extra round-robin spill)
+                indices = tuple(
+                    p.slice_index
+                    for p in decision.placements if p.job_id == job.id
+                    for _ in range(p.lanes))
+                lanes = max(1, len(indices))
+                for i in decision.slices_of(job.id):
+                    self.cluster.allocate_slice(job.user, node, i)
+                trip_eff = T.Triples(1, lanes, 1)
+                ckpt = job.checkpoint
+                if ckpt is not None:    # rehydrate lanes -> slices
+                    rem = {t.id for t in job.tasks} & set(ckpt.remaining)
+                    tasks = [t for t in job.tasks if t.id in rem]
+                    job.checkpoint = None
+                    if tn.gauges is not None:
+                        tn.gauges.on_resume(job.user)
+                else:
+                    tasks = job.tasks
+                run = _GangRun(self, job.user, tasks, trip_eff, [node],
+                               checkpoint=ckpt,
+                               slices=(decision.config, indices))
+                job.state = "running"
+                st.runs[job.id] = run
+                st.hosts[job.id] = job
+                st.placed[job.id] = (job.id, 0)
+                st.active_jobs[job.id] = job
+                st.dispatch_round[job.id] = st.rnd
+                st.granted_lanes[job.id] = lanes
+                first = job.id not in st.first_dispatch
+                st.first_dispatch.setdefault(job.id, st.rnd)
+                self._log("spatial_dispatch", job=job.id, user=job.user,
+                          node=node, slices=list(indices), lanes=lanes,
+                          resumed=ckpt is not None)
+                if tn.gauges is not None:
+                    for p in decision.placements:
+                        if p.job_id == job.id:
+                            tn.gauges.on_slice_alloc(
+                                job.user, node, p.slice_index,
+                                p.chip_frac, p.hbm_frac, p.lanes)
+                    tn.gauges.on_dispatch(
+                        job.user, nodes=0, lanes=lanes,
+                        resident_bytes=int(job.bytes_per_lane * lanes),
+                        wait=float(st.rnd - st.submit_round.get(job.id, 0))
+                        if first else None)
+
     # ----------------------------------------------------------- preemption
     def preempt(self, run_id: int) -> GangCheckpoint:
         """Checkpoint a running gang off its nodes and requeue it.
@@ -595,15 +811,18 @@ class TriplesScheduler:
         # ``rnd`` never happens for this gang (the completion path's
         # ``rnd + 1`` is right only because a finishing gang did step)
         rounds_held = max(0, rnd - st.dispatch_round[job.id])
-        node_time = float(run.trip.nnode * rounds_held)
+        node_time = float(run.node_weight() * rounds_held)
         tn.accountant.charge(job.user, node_time)
         st.charged_rounds.pop(run_id, None)
+        lanes_held = st.granted_lanes.get(
+            job.id, run.trip.nnode * job.trip.nppn) \
+            if run.slices is not None else run.trip.nnode * job.trip.nppn
         if tn.gauges is not None:
             tn.gauges.on_preempt(
-                job.user, nodes=run.trip.nnode, node_time=node_time,
-                lanes=run.trip.nnode * job.trip.nppn,
-                resident_bytes=int(job.bytes_per_lane * run.trip.nnode
-                                   * job.trip.nppn))
+                job.user,
+                nodes=run.trip.nnode if run.slices is None else 0,
+                node_time=node_time, lanes=lanes_held,
+                resident_bytes=int(job.bytes_per_lane * lanes_held))
             tn.gauges.on_gang_done(f"gang:{run_id}")
         self._persist_gang(job.id, ckpt, rnd)
         run.release()
@@ -642,7 +861,8 @@ class TriplesScheduler:
                    for jid in st.active_jobs):
                 continue                # hosting backfilled jobs: skip
             candidates.append((rid, run.user,
-                               float(run.trip.nnode * run.remaining_rounds()),
+                               float(run.node_weight()
+                                     * run.remaining_rounds()),
                                st.hosts[rid].preemptions))
         if not candidates:
             return False
@@ -650,7 +870,7 @@ class TriplesScheduler:
         # gangs but not yet charged (the accountant bills at release)
         accrued: Dict[str, float] = {}
         for rid, run in st.runs.items():
-            held = run.trip.nnode * max(
+            held = run.node_weight() * max(
                 1, rnd + 1 - st.dispatch_round.get(rid, rnd))
             accrued[run.user] = accrued.get(run.user, 0.0) + float(held)
         for pj in tn.queue.ordered():
@@ -694,8 +914,16 @@ class TriplesScheduler:
         rnd = 0
         while len(tn.queue) or active_jobs:
             st.rnd = rnd
-            # dispatch phase: whole-node allocations first
-            running_view = [(run.trip.nnode, float(run.remaining_rounds()))
+            # spatial phase: under contention the mode planner may
+            # partition a free node and start several queued jobs in
+            # isolated slices (DESIGN.md §10) before whole-node dispatch
+            self._spatial_dispatch(st)
+            # dispatch phase: whole-node allocations. Slice-hosted gangs
+            # report their chip FRACTION to the shadow analysis — a
+            # whole-node-each view would overestimate the nodes freeing
+            # and let backfill delay the reserved head gang
+            running_view = [(run.node_weight(),
+                             float(run.remaining_rounds()))
                             for run in runs.values()]
             for pj in tn.queue.pop_dispatchable(
                     self.cluster.free_count(), running_view,
@@ -733,6 +961,11 @@ class TriplesScheduler:
                 placed[job.id] = (job.id, 0)
                 active_jobs[job.id] = job
                 dispatch_round[job.id] = rnd
+                # a job that previously ran on slices (spatial -> preempt
+                # -> whole-node resume) must not release with its stale
+                # slice-lane count: the completion path falls back to the
+                # run's own width once this entry is gone
+                granted_lanes.pop(job.id, None)
                 first = job.id not in st.first_dispatch
                 st.first_dispatch.setdefault(job.id, rnd)
                 if tn.gauges is not None:
@@ -745,9 +978,15 @@ class TriplesScheduler:
                                            * granted * job.trip.nppn),
                         wait=float(rnd - submit_round.get(job.id, 0))
                         if first else None)
-            # lane-backfill phase: free lanes on same-user gangs
+            # lane-backfill phase: free lanes on same-user gangs.
+            # Slice-hosted gangs are excluded: the admission predicate
+            # prices co-residents against the WHOLE-chip budget, but a
+            # slice's budget is its HBM fraction — adopting into a slice
+            # could oversubscribe exactly what admit_slice vetoed
             lane_view: Dict[str, List[Tuple[int, int, float]]] = {}
             for rid, run in runs.items():
+                if run.slices is not None:
+                    continue
                 free = run.free_slot_count()
                 if free > 0:
                     lane_view.setdefault(run.user, []).append(
@@ -844,10 +1083,12 @@ class TriplesScheduler:
                 is_host = jobk == 0
                 # a lane-backfilled job ran on nodes its user already pays
                 # for via the host gang — no extra node-time is charged.
-                # run.trip, not job.trip: a resumed gang may hold FEWER
-                # nodes than requested (elastic resize) and pays for what
-                # it holds
-                node_time = run.trip.nnode * rounds_held if is_host else 0
+                # run.node_weight(), not job.trip: a resumed gang may hold
+                # FEWER nodes than requested (elastic resize), and a
+                # slice-hosted gang holds only a chip FRACTION — both pay
+                # for what they hold
+                node_time = run.node_weight() * rounds_held if is_host \
+                    else 0.0
                 if is_host:
                     charged_rounds[rid] = rounds_held
                 tn.accountant.charge(job.user, node_time)
@@ -857,7 +1098,8 @@ class TriplesScheduler:
                 if tn.gauges is not None:
                     tn.gauges.on_release(
                         job.user,
-                        nodes=run.trip.nnode if is_host else 0,
+                        nodes=run.trip.nnode
+                        if is_host and run.slices is None else 0,
                         node_time=float(node_time),
                         lanes=lanes,
                         resident_bytes=int(job.bytes_per_lane * lanes))
@@ -874,7 +1116,7 @@ class TriplesScheduler:
                     extra = total_rounds - charged_rounds.pop(
                         rid, total_rounds)
                     if extra > 0:
-                        tail_time = float(run.trip.nnode * extra)
+                        tail_time = float(run.node_weight() * extra)
                         tn.accountant.charge(run.user, tail_time)
                         if tn.gauges is not None:
                             tn.gauges.gauge(run.user).node_time += tail_time
@@ -892,7 +1134,7 @@ class TriplesScheduler:
                  results: dict, failed: dict, pending_retry: list):
         ctx = TaskCtx(task_id=task.id, node=slot.node, slot=slot.slot,
                       chips=slot.chips, pack_lane=slot.pack_lane,
-                      ntpp=trip.ntpp)
+                      ntpp=trip.ntpp, slice=slot.slice)
         self._log("dispatch", task=task.id, node=slot.node, slot=slot.slot,
                   chips=slot.chips)
         try:

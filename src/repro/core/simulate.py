@@ -29,6 +29,7 @@ import heapq
 import math
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import spatial as sp
 from repro.core import tenancy as ten
 from repro.core import triples as T
 
@@ -50,6 +51,11 @@ class SimJob:
     bytes_per_lane: float = 0.0
     load_frac: float = 1.0              # chip load one task achieves (paper
                                         # Fig 2: a lone small task ~25%)
+    interference: float = 0.0           # interference intensity in [0, 1]:
+                                        # extra per-co-resident slowdown a
+                                        # memory-bound lane inflicts when
+                                        # packed (DESIGN.md §10); 0 keeps
+                                        # the flat pack_slowdown model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +69,8 @@ class SimJobStats:
     adopted: bool = False               # started on another gang's free
                                         # lanes (lane-level refill)
     preemptions: int = 0                # times checkpointed off its nodes
+    spatial: bool = False               # ran inside spatial slices of a
+                                        # partitioned node (DESIGN.md §10)
 
     @property
     def wait_s(self) -> float:
@@ -88,6 +96,8 @@ class SimReport:
     lane_backfills: int = 0             # jobs started on free lanes
     preemptions: int = 0                # gang checkpoint evictions
     repacks: int = 0                    # modeled online capacity changes
+    spatial_placements: int = 0         # jobs run inside spatial slices
+    reconfigs: int = 0                  # node partition reconfigurations
 
     def mean_wait(self, user: Optional[str] = None) -> float:
         ws = [s.wait_s for s in self.stats
@@ -134,12 +144,16 @@ def job_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
     """Virtual runtime: waves of slots, each wave slowed by co-residency.
 
     pack lanes share a chip's MXU/HBM bandwidth, so a wave of packed lanes
-    runs at ``1 + pack_slowdown × (pack − 1)`` of the exclusive wave time —
-    sublinear, which is exactly why packing wins throughput (paper Fig. 7:
-    packed lanes hide each other's dispatch gaps)."""
+    runs at ``1 + (pack_slowdown + interference) × (pack − 1)`` of the
+    exclusive wave time — sublinear for polite lanes, which is exactly why
+    packing wins throughput (paper Fig. 7: packed lanes hide each other's
+    dispatch gaps). ``SimJob.interference`` adds the memory-bound thrash
+    term the spatial mode exists to remove (DESIGN.md §10); at 0 this is
+    the original flat model."""
     waves = math.ceil(job.n_tasks / eff.total_slots)
     pack = eff.pack_factor(node_spec)
-    return waves * job.task_s * (1.0 + pack_slowdown * (pack - 1))
+    return waves * job.task_s * (
+        1.0 + (pack_slowdown + job.interference) * (pack - 1))
 
 
 def repack_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
@@ -193,6 +207,14 @@ class _Alloc:
     # the admission veto counts every co-resident, not just the host
     adopted_pack: Dict[int, Tuple[int, float]] = dataclasses.field(
         default_factory=dict)
+    spatial: bool = False               # a partitioned node hosting one
+                                        # job per slice (DESIGN.md §10)
+    job_frac: Dict[int, Tuple[str, float]] = dataclasses.field(
+        default_factory=dict)           # jid -> (user, chip_frac) of each
+                                        # slice-hosted job, for fractional
+                                        # fair-share charging
+    last_end: float = 0.0               # latest hosted finish (node busy
+                                        # until the last slice drains)
 
 
 def simulate(jobs: List[SimJob], n_nodes: int,
@@ -204,6 +226,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
              lane_refill: bool = False,
              preemption: Optional[ten.PreemptionPolicy] = None,
              repack: Optional["RepackPolicy"] = None,
+             spatial: Optional[sp.ModePlanner] = None,
              pack_slowdown: float = 0.15,
              half_life: Optional[float] = None) -> SimReport:
     """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes.
@@ -234,6 +257,16 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     grant: start conservative, one wave per rung, a priced latency per
     resize (see repack_duration). ``SimReport.repacks`` counts the
     modeled capacity changes.
+
+    With ``spatial`` (shared mode only; a core.spatial.ModePlanner), the
+    simulator models the live scheduler's spatial dispatch phase
+    (DESIGN.md §10): when queued single-node jobs outnumber the free
+    nodes, the planner may partition one node into isolated slices and
+    run several jobs on it CONCURRENTLY — each paying only intra-slice
+    slowdown (isolation strips the interference term) plus the priced
+    ``reconfig_latency_s``, and charged the chip FRACTION it held.
+    ``SimReport.spatial_placements``/``reconfigs`` count the modeled
+    placements and partition events.
     """
     if mode not in ("shared", "exclusive"):
         raise ValueError(f"mode must be shared|exclusive, got {mode!r}")
@@ -243,6 +276,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         backfill, lane_refill = False, False      # preemption layer
         preemption = None
         repack = None
+        spatial = None
     acct = ten.FairShareAccountant(quotas, half_life=half_life)
     queue = ten.JobQueue(acct)
     pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
@@ -269,6 +303,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     lane_backfills = 0
     n_preemptions = 0
     n_repacks = 0
+    n_spatial = 0
+    n_reconfigs = 0
     MAX_RECHECKS = 64                   # termination bound for jobs that
                                         # can never find a victim
 
@@ -286,7 +322,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                                          [b for _, b in co])
 
     def record(job: SimJob, now: float, end: float, eff: T.Triples,
-               adopted: bool = False):
+               adopted: bool = False, spatial_placed: bool = False):
         """Create/extend the job's stats row. A resumed job keeps its
         FIRST start (wait ends at first dispatch) and preemption count."""
         prev = stats_by_job.get(job.id)
@@ -294,14 +330,89 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             stats_by_job[job.id] = SimJobStats(
                 job=job, start_t=now, end_t=end,
                 pack_factor=eff.pack_factor(node_spec), eff_trip=eff,
-                adopted=adopted)
+                adopted=adopted, spatial=spatial_placed)
         else:
             stats_by_job[job.id] = dataclasses.replace(
                 prev, end_t=end, eff_trip=eff,
-                pack_factor=eff.pack_factor(node_spec))
+                pack_factor=eff.pack_factor(node_spec),
+                spatial=prev.spatial or spatial_placed)
+
+    def spatial_dispatch(now: float):
+        """The live scheduler's spatial phase on virtual time: under
+        contention (queued single-node jobs outnumber free nodes) the
+        mode planner may partition ONE node and run several queued jobs
+        concurrently in isolated slices — each priced at intra-slice
+        slowdown only, plus the partition-reconfigure latency, and
+        charged the chip fraction it holds (DESIGN.md §10)."""
+        nonlocal free, seq, n_spatial, n_reconfigs
+        if spatial is None:
+            return
+        max_group = spatial.max_group
+        skipped: set = set()
+        while True:
+            group, _ = sp.select_spatial_group(
+                queue.ordered(), free, held,
+                lambda u: acct.quota(u).max_nodes, max_group, skipped,
+                eligible_fn=lambda pj: pj.id in pending_payload)
+            if not group:
+                return
+            k = len(group)
+            profiles = []
+            for pj in group:
+                job, eff, _ = pending_payload[pj.id]
+                profiles.append(sp.JobProfile(
+                    job_id=job.id, user=job.user,
+                    n_tasks=pj.n_tasks or job.n_tasks,  # REMAINING work:
+                    # a preempted job resuming on slices must not be
+                    # re-priced at its full original task count
+                    bytes_per_lane=float(pj.bytes_per_lane),
+                    intensity=min(1.0, max(0.0, job.interference)),
+                    task_s=job.task_s, want_lanes=eff.total_slots))
+            plan = spatial.plan_node(profiles)
+            if plan.mode != "spatial":
+                if k == 1:              # this job prefers temporal: let it
+                    skipped.add(group[0].id)    # dispatch, try the next
+                else:                   # group vetoed (e.g. min_grant_frac)
+                    max_group = 1       # — still try single-job isolation
+                continue
+            free -= 1
+            n_reconfigs += 1
+            aid = group[0].id
+            al = _Alloc(nodes=1, start=now, user="",
+                        host_trip=T.Triples(1, 1, 1), bytes_per_lane=0.0,
+                        outstanding=0, spatial=True)
+            allocs[aid] = al
+            for pj in queue.take([p.id for p in group]):
+                job, eff, _ = pending_payload.pop(pj.id)
+                lanes = max(1, plan.lanes_of(job.id))
+                mine = [p for p in plan.placements if p.job_id == job.id]
+                slow = max(spatial.slice_slowdown(
+                    p, min(1.0, max(0.0, job.interference))) for p in mine)
+                waves = math.ceil((pj.n_tasks or job.n_tasks) / lanes)
+                duration = waves * job.task_s * slow + plan.reconfig_s
+                end = now + duration
+                al.outstanding += 1
+                # quota: a partitioned node counts as ONE held node per
+                # user holding any slice on it (same rule as the live
+                # ClusterState.held_counts — max_nodes is a hard cap,
+                # and same-user co-residents share the one node)
+                if not any(u == job.user
+                           for u, _ in al.job_frac.values()):
+                    held[job.user] = held.get(job.user, 0) + 1
+                al.job_frac[job.id] = (job.user, plan.chip_frac_of(job.id))
+                al.last_end = max(al.last_end, end)
+                gen = gen_of.get(job.id, 0) + 1
+                gen_of[job.id] = gen
+                running[job.id] = (aid, end, gen)
+                n_spatial += 1
+                record(job, now, end, T.Triples(1, lanes, eff.ntpp),
+                       spatial_placed=True)
+                heapq.heappush(heap, (end, seq, "finish", (job, gen)))
+                seq += 1
 
     def dispatch(now: float):
         nonlocal free, seq, lane_backfills
+        spatial_dispatch(now)
         alloc_end: Dict[int, float] = {}
         for aid, end, _ in running.values():
             alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
@@ -379,9 +490,10 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         # out from under lane-backfilled co-residents would strand them)
         candidates = []
         for aid, al in allocs.items():
-            if al.outstanding != 1 or al.adopted_pack or aid not in running:
-                continue                # not running pure-host: skip (e.g.
-                                        # host done, adopted job draining)
+            if al.spatial or al.outstanding != 1 or al.adopted_pack \
+                    or aid not in running:
+                continue                # not running pure-host (or a
+                                        # partitioned node): skip
             _, end, _ = running[aid]
             remaining = max(0.0, end - now)
             candidates.append((aid, al.user, al.nodes * remaining,
@@ -482,7 +594,17 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                 al.outstanding -= 1
                 al.adopted_pack.pop(job.id, None)
                 makespan = max(makespan, end)
-                if al.outstanding == 0:  # last hosted job out: nodes free
+                if al.spatial:          # fractional per-slice charging;
+                    user, frac = al.job_frac.pop(job.id, ("", 0.0))
+                    acct.charge(user, frac * (end - al.start))
+                    if not any(u == user
+                               for u, _ in al.job_frac.values()):
+                        held[user] = held.get(user, 0) - 1
+                    if al.outstanding == 0:  # node busy until last slice
+                        free += al.nodes
+                        busy_node_s += al.nodes * (al.last_end - al.start)
+                        del allocs[aid]
+                elif al.outstanding == 0:  # last hosted job out: nodes free
                     free += al.nodes
                     held[al.user] = held.get(al.user, 0) - al.nodes
                     acct.charge(al.user, al.nodes * (end - al.start))
@@ -519,7 +641,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         effective_util=useful_chip_s / (chips * makespan) if makespan else 0.0,
         throughput=completed_tasks / makespan if makespan else 0.0,
         lane_backfills=lane_backfills, preemptions=n_preemptions,
-        repacks=n_repacks)
+        repacks=n_repacks, spatial_placements=n_spatial,
+        reconfigs=n_reconfigs)
 
 
 # ---------------------------------------------------------------------------
@@ -580,15 +703,19 @@ def compare_modes(jobs: List[SimJob], n_nodes: int,
                   lane_refill: bool = False,
                   preemption: Optional[ten.PreemptionPolicy] = None,
                   repack: Optional["RepackPolicy"] = None,
+                  spatial: Optional[sp.ModePlanner] = None,
                   **kw) -> Dict[str, SimReport]:
     """Run the same workload under both policies. With ``lane_refill`` a
     third report, ``shared+refill``, adds lane-level backfill on top of
     the shared policy so the refill gain is isolated; ``preemption``
     likewise adds a ``shared+preempt`` report (checkpoint-based gang
-    preemption on top of the shared policy), and ``repack`` a
+    preemption on top of the shared policy), ``repack`` a
     ``shared+repack`` report (online adaptive packing with its priced
-    convergence ramp, repack_duration) so every policy layer replays
-    deterministically from one workload."""
+    convergence ramp, repack_duration), and ``spatial`` a
+    ``shared+spatial`` report (the interference-aware mode planner
+    partitioning contended nodes into isolated slices, pricing the
+    partition-reconfigure latency — DESIGN.md §10) so every policy layer
+    replays deterministically from one workload."""
     node_spec = node_spec or T.NodeSpec()
     admission = kw.pop("admission", ten.MemoryAdmission(node_spec))
     out = {
@@ -609,6 +736,10 @@ def compare_modes(jobs: List[SimJob], n_nodes: int,
         out["shared+repack"] = simulate(jobs, n_nodes, node_spec,
                                         mode="shared", admission=admission,
                                         repack=repack, **kw)
+    if spatial is not None:
+        out["shared+spatial"] = simulate(jobs, n_nodes, node_spec,
+                                         mode="shared", admission=admission,
+                                         spatial=spatial, **kw)
     return out
 
 

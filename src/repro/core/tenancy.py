@@ -276,6 +276,38 @@ class MemoryAdmission:
                 f"pack_factor {want} exceeds footprint cap {cap}")
         return AdmissionDecision(True, want, cap, "fits")
 
+    # ------------------------------------------------ spatial slices (§10)
+    def slice_lane_cap(self, bytes_per_lane: float,
+                       slice_hbm_bytes: float) -> int:
+        """Largest lane count ``bytes_per_lane`` admits inside ONE spatial
+        slice of ``slice_hbm_bytes`` HBM — the per-slice analogue of
+        ``max_pack``, same headroom, so the spatial planner's frontier
+        and whole-chip admission agree by construction (DESIGN.md §10)."""
+        if bytes_per_lane <= 0:
+            return 10**9                # unknown footprint: unconstrained
+        return int((self.headroom * slice_hbm_bytes) // bytes_per_lane)
+
+    def admit_slice(self, bytes_per_lane: float, lanes: int,
+                    slice_hbm_bytes: float) -> AdmissionDecision:
+        """Veto a slice grant whose HBM fraction is below the job's
+        (measured) footprint: a slice that cannot hold even ONE lane is
+        rejected outright, and a grant of more lanes than the slice's
+        budget admits is rejected — spatial isolation must never become
+        the new 21/48 OOM path."""
+        cap = self.slice_lane_cap(bytes_per_lane, slice_hbm_bytes)
+        if cap < 1:
+            return AdmissionDecision(
+                False, 0, cap,
+                f"slice HBM {slice_hbm_bytes/1e6:.0f} MB at "
+                f"{self.headroom:.0%} headroom is below the per-lane "
+                f"footprint {bytes_per_lane/1e6:.1f} MB; use a bigger "
+                f"slice or triples lanes")
+        if lanes > cap:
+            return AdmissionDecision(
+                False, 0, cap,
+                f"{lanes} lanes exceed the slice cap {cap}")
+        return AdmissionDecision(True, lanes, cap, "fits")
+
     def admit_colocated(self, packs: Sequence[int],
                         bytes_per_lanes: Sequence[float]) -> bool:
         """May these jobs co-reside on one gang's chips? True when their
@@ -498,5 +530,17 @@ class JobQueue:
                 out.append((job, run_id, granted))
                 break
         for job, _, _ in out:
+            self._pending.remove(job)
+        return out
+
+    def take(self, job_ids: Sequence[int]) -> List[PendingJob]:
+        """Remove and return the pending jobs with these ids (order of
+        ``job_ids``). The spatial dispatch phase (DESIGN.md §10) claims
+        the jobs its mode planner placed on slices — they leave the
+        queue exactly like a ``pop_dispatchable`` grant, just through
+        the planner's door."""
+        by_id = {j.id: j for j in self._pending}
+        out = [by_id[i] for i in job_ids if i in by_id]
+        for job in out:
             self._pending.remove(job)
         return out

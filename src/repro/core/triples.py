@@ -74,6 +74,9 @@ class SlotAssignment:
                                          # treat it as a label, not an index
                                          # into a pack_factor-sized pool
     task_ids: Tuple[int, ...]            # tasks this slot executes, in order
+    slice: Optional[int] = None          # spatial slice hosting this slot
+                                         # (core/spatial.py; None = the
+                                         # whole-node temporal modes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,9 +114,26 @@ class TriplesPlan:
 
 def plan(n_tasks: int, triples: Triples,
          node_spec: Optional[NodeSpec] = None,
-         alive_nodes: Optional[Sequence[int]] = None) -> TriplesPlan:
+         alive_nodes: Optional[Sequence[int]] = None,
+         slices: Optional[Tuple[object, Sequence[int]]] = None) -> TriplesPlan:
     """Build the placement plan: tasks -> slots round-robin; slots -> chips
-    round-robin. ``alive_nodes`` restricts placement (elastic re-planning)."""
+    round-robin. ``alive_nodes`` restricts placement (elastic re-planning).
+
+    ``slices`` confines the plan to SPATIAL slices of each node
+    (DESIGN.md §10): a ``(SliceConfig, slice_indices)`` pair naming the
+    slices this job owns. ``slice_indices`` may REPEAT an index to
+    weight it — the scheduler expands the planner's per-slice lane
+    counts into one entry per lane (e.g. ``(0, 0, 2)`` = two lanes on
+    slice 0, one on slice 2), so an admission-capped small slice never
+    receives more slots than ``admit_slice`` approved. Slots cycle over
+    the entries; each slot's chips come from its slice's chip window
+    (``SliceConfig.chips_of``) instead of the whole-node round-robin,
+    and ``SlotAssignment.slice`` records the hosting slice. pack_lane
+    stays unique per (node, chip) across all slices of ONE plan;
+    across co-resident gangs in different slices of the same chip the
+    slice id (part of the slot's address, like a MIG instance handle)
+    is what disambiguates the lanes — their HBM shares are disjoint by
+    construction."""
     node_spec = node_spec or NodeSpec()
     nodes = list(alive_nodes) if alive_nodes is not None else list(
         range(triples.nnode))
@@ -136,8 +156,15 @@ def plan(n_tasks: int, triples: Triples,
     # reduces to (j*ntpp)//cpn in the non-wrapping case.
     lanes_taken: dict = {}              # (node, chip) -> set of lane ids
     for (node, j), tl in zip(slot_keys, task_lists):
-        first = (j * triples.ntpp) % cpn
-        chips = tuple((first + i) % cpn for i in range(min(triples.ntpp, cpn)))
+        if slices is not None:
+            config, indices = slices
+            sl = indices[j % len(indices)]
+            chips = config.chips_of(sl, node_spec)
+        else:
+            sl = None
+            first = (j * triples.ntpp) % cpn
+            chips = tuple((first + i) % cpn
+                          for i in range(min(triples.ntpp, cpn)))
         taken = set()
         for c in chips:
             taken |= lanes_taken.setdefault((node, c), set())
@@ -147,7 +174,8 @@ def plan(n_tasks: int, triples: Triples,
         for c in chips:
             lanes_taken[(node, c)].add(pack_lane)
         slots.append(SlotAssignment(node=node, slot=j, chips=chips,
-                                    pack_lane=pack_lane, task_ids=tuple(tl)))
+                                    pack_lane=pack_lane, task_ids=tuple(tl),
+                                    slice=sl))
     return TriplesPlan(triples=triples, node_spec=node_spec,
                        n_tasks=n_tasks, slots=tuple(slots))
 

@@ -1,6 +1,6 @@
 """Sharding rules: parameter/batch PartitionSpecs for any assigned arch.
 
-Strategy (DESIGN.md §6):
+Strategy:
   * TP ("model" axis): attention q/o folded head dims, MLP d_ff, MoE expert
     dim (EP), vocab dim of embed/unembed. Folded dims keep divisibility even
     for 28/56-head archs; vocab dims may shard unevenly (GSPMD pads).

@@ -125,8 +125,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     mname = mesh_name(mesh)
     label = f"{arch} × {shape_name} × {mname}" + (f" [{tag}]" if tag else "")
     if not cell_is_runnable(arch, shape_name):
-        print(f"[dryrun] SKIP {label} (documented: needs sub-quadratic attn "
-              f"or decoder; see DESIGN.md §Arch-applicability)")
+        print(f"[dryrun] SKIP {label} (documented: this cell needs "
+              f"sub-quadratic attention or a decoder arch)")
         return None
     t0 = time.time()
     try:

@@ -9,8 +9,8 @@ Two execution paths with identical math:
     einsum (MXU-friendly), results scatter-add back. Dropless when
     capacity_factor <= 0. Runs locally or, with ``ep_axis`` set, inside a
     shard_map with experts sharded over the mesh "model" axis
-    (replicated-activation EP: no all-to-all, one psum at the end — see
-    DESIGN.md §6; all-to-all EP is a §Perf experiment).
+    (replicated-activation EP: no all-to-all, one psum at the end;
+    all-to-all dispatch EP remains an open perf experiment).
 
 Shared experts (DeepSeek) are algebraically fused into one dense FFN of
 width n_shared*d_ff (block-diagonal equivalence). The Arctic dense residual

@@ -1,0 +1,510 @@
+"""Spatial slice-sharing + interference-aware mode planner (DESIGN.md §10).
+
+Covers the slice model (legal configs, chip windows, slice-aware
+placement plans), the admission veto for under-HBM slices, the planner's
+mode decisions, the never-over-subscribe property, the live scheduler's
+spatial dispatch phase, and the lanes↔slices drain/rehydrate round trip
+(results identical to an uninterrupted run in BOTH directions).
+"""
+import numpy as np
+import pytest
+
+from repro.core import simulate as S
+from repro.core import spatial as sp
+from repro.core import tenancy as ten
+from repro.core import triples as T
+from repro.core.monitor import TenantGauges
+from repro.core.scheduler import ClusterState, Task, Tenancy, TriplesScheduler
+from tests.prop import given_cases
+
+SPEC = T.NodeSpec()                     # 4 chips × 16 GB
+
+
+# ---------------------------------------------------------------------------
+# slice model
+# ---------------------------------------------------------------------------
+
+def test_legal_configs_respect_budgets():
+    for cfg in sp.legal_configs():
+        assert sum(s.chip_frac for s in cfg.slices) <= 1 + 1e-9, cfg.name
+        assert sum(s.hbm_frac for s in cfg.slices) <= 1 + 1e-9, cfg.name
+        for s in cfg.slices:
+            chips = cfg.chips_of(s.index, SPEC)
+            assert chips, cfg.name
+            assert all(0 <= c < SPEC.chips_per_node for c in chips)
+    names = [c.name for c in sp.legal_configs()]
+    assert len(names) == len(set(names))
+
+
+def test_slice_config_validation():
+    with pytest.raises(ValueError):
+        sp.SliceConfig("bad", (sp.SliceSpec(0, 0.75, 0.5),
+                               sp.SliceSpec(1, 0.75, 0.5)))
+    with pytest.raises(ValueError):
+        sp.SliceConfig("bad", (sp.SliceSpec(1, 0.5, 0.5),))  # sparse index
+    with pytest.raises(ValueError):
+        sp.SliceSpec(0, 0.0, 0.5)
+
+
+def test_symmetric_configs_tile_all_chips():
+    """Every chip of the node is covered by some slice's window."""
+    for cfg in sp.legal_configs():
+        covered = set()
+        for s in cfg.slices:
+            covered |= set(cfg.chips_of(s.index, SPEC))
+        assert covered == set(range(SPEC.chips_per_node)), cfg.name
+
+
+def test_plan_with_slices_confines_chips_and_keeps_lanes_unique():
+    cfg = next(c for c in sp.legal_configs() if c.name == "4w")
+    indices = (1, 2)
+    p = T.plan(12, T.Triples(1, 6, 1), SPEC, alive_nodes=[3],
+               slices=(cfg, indices))
+    allowed = set()
+    for i in indices:
+        allowed |= set(cfg.chips_of(i, SPEC))
+    lanes_per_chip = {}
+    for slot in p.slots:
+        assert slot.slice in indices
+        assert set(slot.chips) <= allowed
+        assert set(slot.chips) == set(cfg.chips_of(slot.slice, SPEC))
+        for c in slot.chips:
+            key = (slot.node, c)
+            assert slot.pack_lane not in lanes_per_chip.setdefault(key, set())
+            lanes_per_chip[key].add(slot.pack_lane)
+    # every task placed exactly once
+    placed = sorted(t for s in p.slots for t in s.task_ids)
+    assert placed == list(range(12))
+
+
+def test_plan_with_weighted_slices_respects_per_slice_lane_counts():
+    """Repeated slice indices weight the round-robin: a plan built from
+    the scheduler's expanded (one entry per lane) index tuple puts
+    EXACTLY the admitted lane count on each slice — an even spill onto
+    an admission-capped small slice would re-open the OOM path."""
+    cfg = next(c for c in sp.legal_configs() if c.name == "1h2q")
+    # planner admitted 3 lanes on the half slice, 1 on a quarter slice
+    p = T.plan(8, T.Triples(1, 4, 1), SPEC, alive_nodes=[0],
+               slices=(cfg, (0, 0, 0, 2)))
+    per_slice = {}
+    for slot in p.slots:
+        per_slice[slot.slice] = per_slice.get(slot.slice, 0) + 1
+    assert per_slice == {0: 3, 2: 1}
+
+
+def test_spatial_dispatch_never_exceeds_slice_admission():
+    """End-to-end: every live spatial dispatch places per-slice slot
+    counts that fit each slice's headroomed HBM budget (the dispatch
+    event's ``slices`` detail repeats an index once per lane)."""
+    bpl = 1e9
+    adm = ten.MemoryAdmission(SPEC)
+    cl = ClusterState(1, SPEC)
+    tn = Tenancy.create(node_spec=SPEC, planner=sp.ModePlanner(SPEC, adm))
+    sched = TriplesScheduler(cl, tenancy=tn)
+    jobs = [sched.submit(u, _mk_tasks(16, u), T.Triples(1, 16, 1),
+                         bytes_per_lane=bpl, interference=0.8)
+            for u in ("ana", "bo", "cy")]
+    done = sched.run_queued()
+    assert all(not done[j.id].failed for j in jobs)
+    partitions = [e for e in sched.events if e.kind == "partition"]
+    dispatches = [e for e in sched.events if e.kind == "spatial_dispatch"]
+    assert partitions and dispatches
+    cfg = next(c for c in sp.legal_configs()
+               if c.name == partitions[0].detail["config"])
+    for d in dispatches:
+        per_slice = {}
+        for i in d.detail["slices"]:
+            per_slice[i] = per_slice.get(i, 0) + 1
+        assert sum(per_slice.values()) == d.detail["lanes"]
+        for idx, lanes in per_slice.items():
+            assert adm.admit_slice(bpl, lanes,
+                                   cfg.hbm_bytes(idx, SPEC)).admitted
+
+
+def test_plan_without_slices_unchanged():
+    p = T.plan(8, T.Triples(1, 4, 1), SPEC)
+    assert all(s.slice is None for s in p.slots)
+
+
+# ---------------------------------------------------------------------------
+# admission veto
+# ---------------------------------------------------------------------------
+
+def test_admit_slice_vetoes_under_hbm_slice():
+    adm = ten.MemoryAdmission(SPEC)     # 16 GB/chip, 0.9 headroom
+    slice_hbm = 8e9                     # an eighth of a 64 GB node
+    d = adm.admit_slice(bytes_per_lane=9e9, lanes=1,
+                        slice_hbm_bytes=slice_hbm)
+    assert not d.admitted and "below the per-lane footprint" in d.reason
+    d = adm.admit_slice(bytes_per_lane=2e9, lanes=4, slice_hbm_bytes=slice_hbm)
+    assert not d.admitted                # cap is 3
+    d = adm.admit_slice(bytes_per_lane=2e9, lanes=3, slice_hbm_bytes=slice_hbm)
+    assert d.admitted and d.max_pack == 3
+    assert adm.slice_lane_cap(0.0, slice_hbm) >= 10**6   # unknown: unbounded
+
+
+def test_planner_rejects_spatial_when_footprint_exceeds_slices():
+    """A job whose measured footprint fits no slice must fall back to a
+    temporal mode — never a spatial OOM."""
+    planner = sp.ModePlanner(SPEC, ten.MemoryAdmission(SPEC))
+    plan = planner.plan_node([sp.JobProfile(
+        job_id=0, n_tasks=8, bytes_per_lane=50e9, intensity=0.9)])
+    assert plan.mode in ("exclusive", "triples")
+    assert not any(k.startswith("spatial") for k in plan.costs)
+
+
+# ---------------------------------------------------------------------------
+# planner decisions
+# ---------------------------------------------------------------------------
+
+def _planner(**kw):
+    return sp.ModePlanner(SPEC, ten.MemoryAdmission(SPEC), **kw)
+
+
+def test_planner_prefers_triples_for_compute_bound():
+    plan = _planner().plan_node([sp.JobProfile(
+        job_id=0, n_tasks=64, bytes_per_lane=1e9, intensity=0.0,
+        want_lanes=32)])
+    assert plan.mode == "triples"
+    assert plan.placements == ()
+
+
+def test_planner_isolates_memory_bound_job():
+    plan = _planner(reconfig_latency_s=2.0).plan_node([sp.JobProfile(
+        job_id=0, n_tasks=16, bytes_per_lane=2e9, intensity=0.8,
+        task_s=4.0, want_lanes=16)])
+    assert plan.mode == "spatial"
+    # the spatial prediction must beat triples by MORE than the priced
+    # reconfigure (the cost already includes it)
+    spatial_cost = plan.costs[f"spatial:{plan.config.name}"]
+    assert spatial_cost < plan.costs["triples"]
+    assert plan.reconfig_s == 2.0
+
+
+def test_planner_coloctes_interfering_tenants():
+    """Three memory-bound tenants contending for one node run
+    concurrently in isolated slices instead of serializing."""
+    profs = [sp.JobProfile(job_id=i, user=f"u{i}", n_tasks=16,
+                           bytes_per_lane=2e9, intensity=0.7, task_s=2.0,
+                           want_lanes=8) for i in range(3)]
+    plan = _planner().plan_node(profs)
+    assert plan.mode == "spatial"
+    owners = {p.job_id for p in plan.placements}
+    assert owners == {0, 1, 2}          # every job landed
+    by_slice = {}
+    for p in plan.placements:
+        assert p.slice_index not in by_slice   # one job per slice
+        by_slice[p.slice_index] = p.job_id
+
+
+def test_planner_interference_override_is_pluggable():
+    prof = sp.JobProfile(job_id=0, n_tasks=16, bytes_per_lane=2e9,
+                         intensity=0.0, task_s=4.0, want_lanes=16)
+    assert _planner().plan_node([prof]).mode == "triples"
+    forced = _planner(interference=lambda p: 0.9)
+    assert forced.plan_node([prof]).mode == "spatial"
+
+
+def test_ewma_interference_reads_gauges():
+    g = TenantGauges(occupancy_decay=0.5)
+    for _ in range(6):
+        g.on_lane_sample("alice", "gang:1", 8, 8)
+    score = sp.ewma_interference(g)
+    assert score(sp.JobProfile(job_id=0, user="alice")) > 0.9
+    assert score(sp.JobProfile(job_id=1, user="bob")) == 0.0
+    assert g.user_occupancy("alice") > 0.9
+
+
+# ---------------------------------------------------------------------------
+# never over-subscribe (property)
+# ---------------------------------------------------------------------------
+
+@given_cases(n=60, seed=7)
+def test_planner_never_oversubscribes(rng):
+    """For ANY randomized job mix, a planner placement never promises
+    more than the node has: summed chip and HBM fractions ≤ 1.0, one job
+    per slice, per-slice lanes × footprint within the headroomed slice
+    HBM, and triples packs within the admission frontier."""
+    adm = ten.MemoryAdmission(SPEC, headroom=float(rng.uniform(0.5, 1.0)))
+    planner = sp.ModePlanner(
+        SPEC, adm, base_slowdown=float(rng.uniform(0.0, 0.5)),
+        reconfig_latency_s=float(rng.uniform(0.0, 4.0)),
+        min_grant_frac=float(rng.uniform(0.0, 1.0)))
+    profiles = [sp.JobProfile(
+        job_id=i, user=f"u{i % 3}",
+        n_tasks=int(rng.integers(1, 128)),
+        bytes_per_lane=float(rng.uniform(0, 8e9)),
+        intensity=float(rng.uniform(0, 1)),
+        task_s=float(rng.uniform(0.5, 4.0)),
+        want_lanes=int(rng.integers(0, 64)))
+        for i in range(int(rng.integers(1, 9)))]
+    plan = planner.plan_node(profiles)
+    assert plan.mode in ("exclusive", "triples", "spatial")
+    if plan.mode == "spatial":
+        assert plan.config is not None and plan.placements
+        assert sum(p.chip_frac for p in plan.placements) <= 1 + 1e-9
+        assert sum(p.hbm_frac for p in plan.placements) <= 1 + 1e-9
+        seen = set()
+        for p in plan.placements:
+            assert p.slice_index not in seen    # ≤ 1 job per slice
+            seen.add(p.slice_index)
+            assert p.lanes >= 1
+            prof = next(pr for pr in profiles if pr.job_id == p.job_id)
+            budget = plan.config.hbm_bytes(p.slice_index, SPEC)
+            if prof.bytes_per_lane > 0:
+                assert p.lanes * prof.bytes_per_lane \
+                    <= adm.headroom * budget + 1e-6
+    else:
+        for prof in profiles:           # triples pack within the frontier
+            pack = planner.triples_pack(prof)
+            assert pack <= max(1, adm.max_pack(prof.bytes_per_lane))
+            assert pack <= planner.max_pack_per_chip
+
+
+# ---------------------------------------------------------------------------
+# tenancy queue helper
+# ---------------------------------------------------------------------------
+
+def test_jobqueue_take_removes_only_named_jobs():
+    q = ten.JobQueue()
+    for i in range(4):
+        q.push(ten.PendingJob(id=i, user="u", n_nodes=1,
+                              submit_seq=q.next_seq()))
+    out = q.take([2, 0, 9])
+    assert [j.id for j in out] == [2, 0]
+    assert sorted(j.id for j in q.ordered()) == [1, 3]
+
+
+# ---------------------------------------------------------------------------
+# live scheduler: spatial dispatch + gauges
+# ---------------------------------------------------------------------------
+
+def _mk_tasks(n, tag):
+    return [Task(id=i, fn=lambda ctx, i=i, tag=tag:
+                 float(np.float32(np.sin(i * 1.25)) * np.float32(len(tag))))
+            for i in range(n)]
+
+
+def test_spatial_dispatch_runs_co_tenants_concurrently():
+    cl = ClusterState(1, SPEC)
+    gauges = TenantGauges()
+    tn = Tenancy.create(node_spec=SPEC, gauges=gauges,
+                        planner=sp.ModePlanner(SPEC))
+    sched = TriplesScheduler(cl, tenancy=tn)
+    jobs = [sched.submit(u, _mk_tasks(16, u), T.Triples(1, 16, 1),
+                         bytes_per_lane=1e9, interference=0.8)
+            for u in ("alice", "bob", "carol")]
+    done = sched.run_queued()
+    for j in jobs:
+        assert j.state == "done"
+        assert len(done[j.id].results) == 16 and not done[j.id].failed
+    kinds = [e.kind for e in sched.events]
+    assert "partition" in kinds and "spatial_dispatch" in kinds
+    assert "alloc" not in kinds         # nobody needed a whole node
+    # the partition dissolved with its last slice
+    assert not cl.partitions and not cl.slice_owner
+    # co-tenants were resident at once: waits are 0 for all three
+    assert all(done[j.id].wait_rounds == 0 for j in jobs)
+    # fair-share charged FRACTIONS of the node, not three whole nodes
+    acct = tn.accountant
+    assert 0 < sum(acct.usage(u) for u in ("alice", "bob", "carol")) <= \
+        3.001 * max(1, max(done[j.id].alloc_cycles for j in jobs))
+
+
+def test_spatial_results_identical_to_whole_node_run():
+    """The same jobs produce identical per-task results with and without
+    the planner — slices change placement, never values."""
+    def drive(planner):
+        cl = ClusterState(1, SPEC)
+        tn = Tenancy.create(node_spec=SPEC, planner=planner)
+        sched = TriplesScheduler(cl, tenancy=tn)
+        jobs = [sched.submit(u, _mk_tasks(6, u), T.Triples(1, 4, 1),
+                             bytes_per_lane=2e9, interference=0.9)
+                for u in ("alice", "bob")]
+        done = sched.run_queued()
+        return {j.user: done[j.id].results for j in jobs}
+
+    assert drive(sp.ModePlanner(SPEC)) == drive(None)
+
+
+def test_spatial_never_bypasses_easy_reservation():
+    """A wider head-of-queue gang keeps its EASY reservation: 1-node
+    jobs behind it must not grab its nodes through slices."""
+    def drive(planner):
+        cl = ClusterState(2, SPEC)
+        tn = Tenancy.create(node_spec=SPEC, planner=planner)
+        sched = TriplesScheduler(cl, tenancy=tn)
+        head = sched.submit("big", _mk_tasks(16, "big"), T.Triples(2, 4, 1))
+        for u in ("s1", "s2"):
+            sched.submit(u, _mk_tasks(16, u), T.Triples(1, 16, 1),
+                         bytes_per_lane=1e9, interference=0.9)
+        done = sched.run_queued()
+        return done[head.id].wait_rounds
+
+    assert drive(sp.ModePlanner(SPEC)) == drive(None) == 0
+
+
+def test_spatial_dispatch_respects_max_nodes_quota():
+    """A hard-capped tenant must not acquire capacity through slices —
+    a slice holding counts as a held node against ``max_nodes``."""
+    cl = ClusterState(2, SPEC)
+    tn = Tenancy.create(quotas={"capped": ten.TenantQuota(max_nodes=0)},
+                        node_spec=SPEC, planner=sp.ModePlanner(SPEC))
+    sched = TriplesScheduler(cl, tenancy=tn)
+    sched.submit("capped", _mk_tasks(16, "a"), T.Triples(1, 16, 1),
+                 bytes_per_lane=1e9, interference=0.9)
+    sched.submit("capped", _mk_tasks(16, "b"), T.Triples(1, 16, 1),
+                 bytes_per_lane=1e9, interference=0.9)
+    done = sched.run_queued()
+    assert not done, "max_nodes=0 must block slice placement too"
+    assert not any(e.kind in ("partition", "spatial_dispatch")
+                   for e in sched.events)
+    # sim agrees: the same quota starves spatial placement there too
+    job = S.SimJob(id=0, user="capped", submit_t=0.0, kind="serve",
+                   n_tasks=16, task_s=1.0, trip=T.Triples(1, 16, 1),
+                   bytes_per_lane=1e9, interference=0.9)
+    r = S.simulate([job, dataclasses_replace_sim(job, 1)], 2, SPEC,
+                   mode="shared",
+                   quotas={"capped": ten.TenantQuota(max_nodes=0)},
+                   admission=ten.MemoryAdmission(SPEC),
+                   spatial=sp.ModePlanner(SPEC))
+    assert r.spatial_placements == 0 and not r.stats
+
+
+def dataclasses_replace_sim(job, new_id):
+    import dataclasses
+    return dataclasses.replace(job, id=new_id, submit_t=0.5)
+
+
+def test_slice_gauges_roundtrip():
+    g = TenantGauges()
+    g.on_slice_alloc("alice", node=2, slice_index=1, chip_frac=0.25,
+                     hbm_frac=0.25, lanes=3)
+    assert g.gauge("alice").slices == 1
+    table = g.slice_table()
+    assert "alice" in table and "25.0%" in table
+    assert "SLC" in g.table()
+    g.on_slice_release(2, 1)
+    assert g.gauge("alice").slices == 0
+    assert "alice" not in g.slice_table()
+
+
+# ---------------------------------------------------------------------------
+# lanes <-> slices drain/rehydrate round trip
+# ---------------------------------------------------------------------------
+
+def _round_trip(direction):
+    """Preempt a gang mid-run and resume it under the OTHER placement
+    mode. ``direction`` is "lanes_to_slices" or "slices_to_lanes". The
+    pluggable interference score flips after the preemption, steering the
+    resume through (or away from) the spatial phase."""
+    cl = ClusterState(1, SPEC)
+    holder = {}
+
+    def score(p):
+        job = holder["sched"]._jobs.get(p.job_id)
+        preempted = job is not None and job.preemptions > 0
+        if direction == "lanes_to_slices":
+            return 0.9 if preempted else 0.0
+        return 0.0 if preempted else 0.9
+
+    tn = Tenancy.create(
+        node_spec=SPEC,
+        planner=sp.ModePlanner(SPEC, interference=score),
+        preemption=ten.PreemptionPolicy(wait_threshold=2,
+                                        elastic_min_frac=1.0))
+    sched = TriplesScheduler(cl, tenancy=tn)
+    holder["sched"] = sched
+    hog = sched.submit("hog", _mk_tasks(64, "hog"), T.Triples(1, 16, 1),
+                       bytes_per_lane=1e9)
+    iris = sched.submit("iris", _mk_tasks(2, "iris"), T.Triples(1, 2, 1),
+                        bytes_per_lane=1e9)
+    done = sched.run_queued()
+    return sched, hog, iris, done
+
+
+@pytest.mark.parametrize("direction", ["lanes_to_slices", "slices_to_lanes"])
+def test_drain_rehydrate_round_trip_bit_identical(direction):
+    sched, hog, iris, done = _round_trip(direction)
+    assert done[hog.id].preemptions >= 1, "the gang must have drained"
+    kinds = [e.kind for e in sched.events]
+    assert "preempt" in kinds
+    assert "spatial_dispatch" in kinds, \
+        "one leg of the trip must run on slices"
+    assert "alloc" in kinds, "one leg of the trip must run on lanes"
+    spatial_jobs = {e.detail["job"] for e in sched.events
+                    if e.kind == "spatial_dispatch"}
+    assert hog.id in spatial_jobs
+    # reference: the same tasks uninterrupted on whole-node lanes
+    cl0 = ClusterState(1, SPEC)
+    s0 = TriplesScheduler(cl0, tenancy=Tenancy.create(node_spec=SPEC))
+    ref = s0.submit("hog", _mk_tasks(64, "hog"), T.Triples(1, 16, 1))
+    r0 = s0.run_queued()[ref.id]
+    assert done[hog.id].results == r0.results, \
+        "drain/rehydrate across placement modes must be bit-identical"
+    assert not done[hog.id].failed and not done[iris.id].failed
+
+
+# ---------------------------------------------------------------------------
+# simulator: shared+spatial
+# ---------------------------------------------------------------------------
+
+def _interference_mix():
+    cpn = SPEC.chips_per_node
+    jobs = []
+    jid = 0
+    for i in range(8):                  # memory-bound serve jobs
+        jobs.append(S.SimJob(
+            id=jid, user=["u1", "u2", "u3"][i % 3], submit_t=2.0 * i,
+            kind="serve", n_tasks=4 * cpn, task_s=4.0,
+            trip=T.Triples(1, 4 * cpn, 1), bytes_per_lane=2e9,
+            load_frac=0.4, interference=0.8))
+        jid += 1
+    for i in range(4):                  # compute-bound sweeps
+        jobs.append(S.SimJob(
+            id=jid, user="u4", submit_t=1.0 + 3.0 * i, kind="sweep",
+            n_tasks=8 * cpn, task_s=1.0, trip=T.Triples(1, 4 * cpn, 1),
+            bytes_per_lane=1.5e9, load_frac=0.25, interference=0.05))
+        jid += 1
+    return jobs
+
+
+def test_compare_modes_reports_shared_spatial():
+    planner = sp.ModePlanner(SPEC, ten.MemoryAdmission(SPEC),
+                             reconfig_latency_s=2.0)
+    reports = S.compare_modes(_interference_mix(), 3, SPEC, spatial=planner)
+    assert set(reports) == {"exclusive", "shared", "shared+spatial"}
+    spa = reports["shared+spatial"]
+    assert spa.spatial_placements > 0 and spa.reconfigs > 0
+    assert spa.makespan < reports["shared"].makespan
+    assert spa.makespan < reports["exclusive"].makespan
+    assert not spa.rejected
+    assert any(s.spatial for s in spa.stats)
+    # compute-bound sweeps stay temporal
+    assert all(not s.spatial for s in spa.stats if s.job.kind == "sweep")
+    # deterministic replay
+    again = S.simulate(_interference_mix(), 3, SPEC, mode="shared",
+                       admission=ten.MemoryAdmission(SPEC), spatial=planner)
+    assert again.makespan == spa.makespan
+    assert [(s.job.id, s.start_t, s.end_t) for s in again.stats] == \
+        [(s.job.id, s.start_t, s.end_t) for s in spa.stats]
+
+
+def test_sim_interference_slows_packed_baseline_only():
+    """interference=0 keeps the original flat model; > 0 stretches
+    packed waves and leaves exclusive (pack 1) untouched."""
+    cpn = SPEC.chips_per_node
+    base = S.SimJob(id=0, user="u", submit_t=0.0, kind="sweep",
+                    n_tasks=2 * cpn, task_s=2.0,
+                    trip=T.Triples(1, 2 * cpn, 1), bytes_per_lane=1e9)
+    hot = S.SimJob(id=0, user="u", submit_t=0.0, kind="sweep",
+                   n_tasks=2 * cpn, task_s=2.0,
+                   trip=T.Triples(1, 2 * cpn, 1), bytes_per_lane=1e9,
+                   interference=0.5)
+    eff = S.effective_triples(base.trip, SPEC, "shared",
+                              ten.MemoryAdmission(SPEC), 1e9)
+    assert S.job_duration(hot, eff, SPEC, 0.15) > \
+        S.job_duration(base, eff, SPEC, 0.15)
+    excl = S.effective_triples(base.trip, SPEC, "exclusive", None, 0.0)
+    assert S.job_duration(hot, excl, SPEC, 0.15) == \
+        S.job_duration(base, excl, SPEC, 0.15)
