@@ -1,0 +1,183 @@
+"""Canonical-trace replay: the scheduler-quality trajectory gate.
+
+Two halves, one tracked history (BENCH_HISTORY.json at the repo root):
+
+  * QUALITY — replay every committed trace under ``benchmarks/traces/``
+    through ``compare_modes`` (exclusive / shared / +refill / +preempt /
+    +repack / +spatial / +full) and record utilization, p50/p99 wait,
+    makespan, throughput and the policy counters per mode. The simulator
+    is deterministic and the traces are committed, so these numbers are
+    compared against the last committed history entry EXACTLY (``==`` on
+    IEEE-754 doubles) — a PR that shifts packing or planner decisions
+    fails the ``--check`` gate loudly instead of silently regressing the
+    paper's headline claim.
+  * PERF — generate a fresh ``traces.perf_spec`` workload sized to
+    ``--events`` heap events at ~0.9 offered utilization and replay it
+    once in shared mode. Events-per-second is ADVISORY (machine-
+    dependent): it is recorded in the history entry and printed, but
+    never gated.
+
+Usage:
+    python benchmarks/bench_trace_replay.py                # local run
+    python benchmarks/bench_trace_replay.py --smoke        # CI-sized
+    python benchmarks/bench_trace_replay.py --check --events 1000000
+        # the CI gate: exact quality compare + 10^6-event perf replay
+    python benchmarks/bench_trace_replay.py --update
+        # INTENTIONAL re-baseline: append entry to the tracked history
+
+The updated history is always written to $BENCH_JSON_DIR (CI uploads it
+as an artifact); the tracked copy in the repo root is only rewritten
+with ``--update`` (see docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.common import append_history, emit, load_history
+from repro.core import simulate as S
+from repro.core import traces as TR
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACES_DIR = os.path.join(REPO_ROOT, "benchmarks", "traces")
+HISTORY_PATH = os.path.join(REPO_ROOT, "BENCH_HISTORY.json")
+
+
+def _metrics(r: S.SimReport) -> dict:
+    """The tracked per-mode quality row. Every field is deterministic
+    (virtual time only), so the gate compares them exactly."""
+    return {
+        "utilization": r.node_util,
+        "effective_util": r.effective_util,
+        "p50_wait": r.p50_wait(),
+        "p99_wait": r.p99_wait(),
+        "mean_wait": r.mean_wait(),
+        "makespan": r.makespan,
+        "throughput": r.throughput,
+        "completed": len(r.stats),
+        "rejected": len(r.rejected),
+        "events": r.events,
+        "lane_backfills": r.lane_backfills,
+        "preemptions": r.preemptions,
+        "repacks": r.repacks,
+        "spatial_placements": r.spatial_placements,
+    }
+
+
+def replay_suite(traces_dir: str = TRACES_DIR) -> Dict[str, Dict[str, dict]]:
+    """Replay every canonical trace file; {trace: {mode: metrics}}."""
+    quality: Dict[str, Dict[str, dict]] = {}
+    for name in sorted(TR.CANONICAL):
+        path = TR.trace_path(traces_dir, name)
+        header, jobs = TR.load_jsonl(path)
+        cfg = TR.replay_config_from(header)
+        t0 = time.perf_counter()
+        reports = S.compare_modes(jobs, cfg.n_nodes,
+                                  **TR.replay_kwargs(cfg))
+        wall = time.perf_counter() - t0
+        quality[name] = {mode: _metrics(r) for mode, r in reports.items()}
+        shared = reports["shared"]
+        emit(f"trace_replay/{name}", wall * 1e6 / max(1, len(reports)),
+             f"jobs={len(jobs)} modes={len(reports)} "
+             f"shared_util={shared.node_util:.4f} "
+             f"shared_p99w={shared.p99_wait():.1f}")
+    return quality
+
+
+def diff_quality(old: Dict[str, Dict[str, dict]],
+                 new: Dict[str, Dict[str, dict]]) -> List[str]:
+    """Exact comparison of two quality blobs; human-readable drift rows.
+    Missing traces/modes are drift too — a mode that stops being
+    produced is as much a regression as a changed number."""
+    out: List[str] = []
+    for trace in sorted(set(old) | set(new)):
+        if trace not in old or trace not in new:
+            out.append(f"{trace}: only in "
+                       f"{'committed' if trace in old else 'current'}")
+            continue
+        for mode in sorted(set(old[trace]) | set(new[trace])):
+            if mode not in old[trace] or mode not in new[trace]:
+                out.append(f"{trace}/{mode}: only in "
+                           f"{'committed' if mode in old[trace] else 'current'}")
+                continue
+            om, nm = old[trace][mode], new[trace][mode]
+            for k in sorted(set(om) | set(nm)):
+                if om.get(k) != nm.get(k):
+                    out.append(f"{trace}/{mode}/{k}: "
+                               f"committed={om.get(k)!r} "
+                               f"current={nm.get(k)!r}")
+    return out
+
+
+def perf_replay(n_events: int) -> dict:
+    """The throughput half: one shared-mode replay of a ~0.9-utilization
+    trace sized to ``n_events``. Returns the advisory perf record."""
+    t0 = time.perf_counter()
+    jobs = TR.scaled_to_utilization(TR.generate(TR.perf_spec(n_events)),
+                                    64, 0.9)
+    gen_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r = S.simulate(jobs, 64)
+    wall = time.perf_counter() - t0
+    eps = r.events / wall if wall else 0.0
+    emit("trace_replay/perf", wall * 1e6 / max(1, r.events),
+         f"events={r.events} wall_s={wall:.2f} gen_s={gen_s:.2f} "
+         f"events_per_s={eps:,.0f} util={r.node_util:.3f}")
+    return {"requested_events": n_events, "events": r.events,
+            "n_jobs": len(jobs), "wall_s": wall, "gen_s": gen_s,
+            "events_per_s": eps, "utilization": r.node_util,
+            "makespan": r.makespan}
+
+
+def _flag_value(argv: List[str], flag: str, default: int) -> int:
+    if flag in argv:
+        return int(argv[argv.index(flag) + 1])
+    return default
+
+
+def run(smoke: bool = False) -> Tuple[dict, dict]:
+    argv = sys.argv[1:]
+    smoke = smoke or "--smoke" in argv
+    check = "--check" in argv
+    update = "--update" in argv
+    n_events = _flag_value(argv, "--events", 20_000 if smoke else 100_000)
+
+    quality = replay_suite()
+
+    if check:
+        hist = load_history(HISTORY_PATH)
+        if not hist["entries"]:
+            raise RuntimeError(f"--check with empty history {HISTORY_PATH}")
+        drift = diff_quality(hist["entries"][-1]["quality"], quality)
+        if drift:
+            print(f"# QUALITY DRIFT vs {HISTORY_PATH} "
+                  f"({len(drift)} rows):", flush=True)
+            for row in drift:
+                print(f"#   {row}", flush=True)
+            raise AssertionError(
+                f"scheduler quality drifted from committed history in "
+                f"{len(drift)} metric(s); if intentional, re-baseline "
+                f"with --update and commit BENCH_HISTORY.json")
+        print("# quality matches committed history exactly", flush=True)
+
+    perf = perf_replay(n_events)
+    entry = {"label": "smoke" if smoke else ("ci" if check else "local"),
+             "quality": quality, "perf": perf}
+
+    # artifact copy always; the tracked file only on explicit --update
+    # (skip the artifact write when it would alias the tracked file —
+    # BENCH_JSON_DIR defaults to the cwd, which may be the repo root)
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    artifact = os.path.join(out_dir, "BENCH_HISTORY.json")
+    if os.path.abspath(artifact) != os.path.abspath(HISTORY_PATH):
+        append_history(artifact, entry)
+    if update:
+        append_history(HISTORY_PATH, entry)
+    return quality, perf
+
+
+if __name__ == "__main__":
+    run()

@@ -30,6 +30,35 @@ def write_json(bench: str, payload: dict) -> str:
     return path
 
 
+def load_history(path: str) -> dict:
+    """Read a tracked history file (e.g. BENCH_HISTORY.json). Missing
+    file -> empty history, so a fresh clone can seed its own."""
+    if not os.path.exists(path):
+        return {"schema": 1, "entries": []}
+    with open(path) as f:
+        hist = json.load(f)
+    if hist.get("schema") != 1:
+        raise ValueError(f"unknown history schema in {path}")
+    return hist
+
+
+def append_history(path: str, entry: dict) -> dict:
+    """Append ``entry`` to the history at ``path`` and rewrite it.
+
+    Floats are serialised via ``repr`` (json's default), which
+    round-trips IEEE-754 doubles exactly — this is what lets the
+    scheduler-quality CI gate compare the committed metrics with ``==``
+    instead of tolerances (the simulator is deterministic; any drift is
+    a real behaviour change)."""
+    hist = load_history(path)
+    hist["entries"].append(entry)
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# appended history entry -> {path}", flush=True)
+    return hist
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall seconds per call (blocks on jax outputs)."""
     import jax

@@ -10,12 +10,12 @@ def main() -> None:
     from benchmarks import (bench_mnist_sharing, bench_imagenet_sharing,
                             bench_lane_refill, bench_multitenant,
                             bench_preemption, bench_repack, bench_spatial,
-                            bench_scheduler_overhead,
+                            bench_scheduler_overhead, bench_trace_replay,
                             bench_oom_guard, roofline_table, bench_kernels)
     failures = []
     for mod in (bench_scheduler_overhead, bench_multitenant,
                 bench_preemption, bench_lane_refill, bench_repack,
-                bench_spatial, bench_oom_guard,
+                bench_spatial, bench_trace_replay, bench_oom_guard,
                 bench_mnist_sharing, bench_imagenet_sharing,
                 bench_kernels, roofline_table):
         name = mod.__name__.split(".")[-1]

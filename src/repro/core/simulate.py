@@ -38,9 +38,10 @@ if False:                               # type-only; repack pulls in jax via
                                         # simulator import-light and pure
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class SimJob:
-    """One job of the replayed workload."""
+    """One job of the replayed workload. ``slots``: a 10^6-event trace
+    holds ~500k of these live at once (DESIGN.md §11)."""
     id: int
     user: str
     submit_t: float
@@ -58,7 +59,7 @@ class SimJob:
                                         # the flat pack_slowdown model
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class SimJobStats:
     job: SimJob
     start_t: float                      # FIRST dispatch (wait ends here)
@@ -98,6 +99,8 @@ class SimReport:
     repacks: int = 0                    # modeled online capacity changes
     spatial_placements: int = 0         # jobs run inside spatial slices
     reconfigs: int = 0                  # node partition reconfigurations
+    events: int = 0                     # heap events processed (the trace-
+                                        # replay bench's events/s denominator)
 
     def mean_wait(self, user: Optional[str] = None) -> float:
         ws = [s.wait_s for s in self.stats
@@ -113,6 +116,20 @@ class SimReport:
         ws = sorted(s.wait_s for s in self.stats
                     if user is None or s.job.user == user)
         return ws[len(ws) // 2] if ws else 0.0
+
+    def wait_quantile(self, q: float, user: Optional[str] = None) -> float:
+        """Nearest-rank wait quantile (q in [0, 1]) — the scheduler-quality
+        trajectory tracks p50/p99 per mode (DESIGN.md §11)."""
+        if not 0 <= q <= 1:
+            raise ValueError(f"q must be in [0, 1], got {q}")
+        ws = sorted(s.wait_s for s in self.stats
+                    if user is None or s.job.user == user)
+        if not ws:
+            return 0.0
+        return ws[min(len(ws) - 1, max(0, math.ceil(q * len(ws)) - 1))]
+
+    def p99_wait(self, user: Optional[str] = None) -> float:
+        return self.wait_quantile(0.99, user)
 
     def job_span(self, job_id: int) -> float:
         """Submit-to-completion span of one job (preemption overhead)."""
@@ -189,7 +206,7 @@ def repack_duration(job: SimJob, eff: T.Triples, node_spec: T.NodeSpec,
     return t, repacks
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Alloc:
     """One whole-node allocation — possibly hosting several jobs under
     lane-level refill. Nodes free when the LAST hosted job finishes."""
@@ -201,6 +218,12 @@ class _Alloc:
     outstanding: int = 1
     spare: int = 0                      # free lanes during the tail wave
     spare_from: float = math.inf        # when the tail wave starts
+    host_end: float = 0.0               # host segment's finish time: the
+                                        # no-extension adoption rule keeps
+                                        # every hosted job's end <= this, so
+                                        # it doubles as the allocation's
+                                        # remaining-time anchor without an
+                                        # O(running) rebuild per event
     duration: float = 0.0               # host segment length (preemption
                                         # computes remaining work from it)
     # jid -> (pack_factor, bytes_per_lane) of still-running adopted jobs;
@@ -282,12 +305,16 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
     rejected: List[Tuple[SimJob, str]] = []
 
-    # event heap: (t, seq, kind, payload)
-    heap: List[Tuple[float, int, str, object]] = []
+    # event heap: (t, seq, kind, payload). Built in one pass + heapify
+    # (a seq-stamped sorted list is already heap-ordered) instead of n
+    # O(log n) pushes; pop order is identical either way — (t, seq) is a
+    # total order, so the heap's internal layout cannot change results.
     seq = 0
+    heap: List[Tuple[float, int, str, object]] = []
     for job in sorted(jobs, key=lambda j: (j.submit_t, j.id)):
-        heapq.heappush(heap, (job.submit_t, seq, "submit", job))
+        heap.append((job.submit_t, seq, "submit", job))
         seq += 1
+    heapq.heapify(heap)
 
     free = n_nodes
     allocs: Dict[int, _Alloc] = {}      # alloc id (host jid) -> state
@@ -296,6 +323,12 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     held: Dict[str, int] = {}
     stats_by_job: Dict[int, SimJobStats] = {}
     preempt_checks: Dict[int, int] = {}  # jid -> rechecks scheduled
+    spare_aids: Dict[int, None] = {}    # allocs with free tail-wave lanes,
+                                        # in dispatch order (matching the
+                                        # old full-alloc scan's tie-break):
+                                        # the lane-refill phase scans THIS,
+                                        # not every live allocation
+    n_events = 0
     busy_node_s = 0.0
     useful_chip_s = 0.0
     completed_tasks = 0
@@ -345,8 +378,9 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         slowdown only, plus the partition-reconfigure latency, and
         charged the chip fraction it holds (DESIGN.md §10)."""
         nonlocal free, seq, n_spatial, n_reconfigs
-        if spatial is None:
-            return
+        if spatial is None or free < 1 or not len(queue):
+            return                      # a partition needs a free node and
+                                        # queued jobs — exact early-out
         max_group = spatial.max_group
         skipped: set = set()
         while True:
@@ -410,15 +444,23 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                 heapq.heappush(heap, (end, seq, "finish", (job, gen)))
                 seq += 1
 
+    def running_view(now: float) -> List[Tuple[float, float]]:
+        """[(nodes, remaining)] for the EASY shadow analysis. Only built
+        when a blocked head actually needs a reservation — the lazy
+        provider keeps the per-event dispatch cost O(touched allocations)
+        instead of O(every running job on the cluster)."""
+        alloc_end: Dict[int, float] = {}
+        for aid, end, _ in running.values():
+            if end > alloc_end.get(aid, 0.0):
+                alloc_end[aid] = end
+        return [(allocs[aid].nodes, alloc_end[aid] - now)
+                for aid in alloc_end]
+
     def dispatch(now: float):
         nonlocal free, seq, lane_backfills
         spatial_dispatch(now)
-        alloc_end: Dict[int, float] = {}
-        for aid, end, _ in running.values():
-            alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
-        running_view = [(allocs[aid].nodes, alloc_end[aid] - now)
-                        for aid in alloc_end]
-        for pj in queue.pop_dispatchable(free, running_view,
+        for pj in queue.pop_dispatchable(free,
+                                         lambda: running_view(now),
                                          held_by_user=held,
                                          backfill=backfill):
             job, eff, duration = pending_payload.pop(pj.id)
@@ -437,7 +479,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                         host_trip=eff, bytes_per_lane=float(job.bytes_per_lane),
                         spare=eff.total_slots - tail_occ,
                         spare_from=now + (waves - 1) * (duration / waves),
-                        duration=duration)
+                        duration=duration, host_end=end)
             allocs[job.id] = al
             gen = gen_of.get(job.id, 0) + 1
             gen_of[job.id] = gen
@@ -446,21 +488,25 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             heapq.heappush(heap, (end, seq, "finish", (job, gen)))
             seq += 1
             if lane_refill and al.spare > 0:
+                spare_aids[job.id] = None
                 heapq.heappush(heap, (al.spare_from, seq, "spare", job))
                 seq += 1
-        if not lane_refill:
+        if not lane_refill or not spare_aids or not len(queue):
             return
         # lane-level refill: queued jobs onto free tail-wave lanes of a
         # same-user gang (zero fresh nodes; nodes stay held until every
-        # hosted job finishes)
-        alloc_end: Dict[int, float] = {}
-        for aid, end, _ in running.values():
-            alloc_end[aid] = max(alloc_end.get(aid, 0.0), end)
+        # hosted job finishes). Only the indexed spare allocations are
+        # visited; the host's own finish time is the allocation's end
+        # (adoption never extends it — pop_lane_backfill's fit rule)
         lane_view: Dict[str, List[Tuple[int, int, float]]] = {}
-        for aid, al in allocs.items():
-            if al.outstanding and al.spare > 0 and al.spare_from <= now:
+        for aid in list(spare_aids):
+            al = allocs.get(aid)
+            if al is None or al.spare <= 0 or not al.outstanding:
+                del spare_aids[aid]
+                continue
+            if al.spare_from <= now:
                 lane_view.setdefault(al.user, []).append(
-                    (aid, al.spare, alloc_end.get(aid, now) - now))
+                    (aid, al.spare, al.host_end - now))
         if not lane_view:
             return
         for pj, aid, granted in queue.pop_lane_backfill(lane_view,
@@ -468,6 +514,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             job, eff, _ = pending_payload.pop(pj.id)
             al = allocs[aid]
             al.spare -= granted
+            if al.spare <= 0:
+                spare_aids.pop(aid, None)
             al.outstanding += 1
             al.adopted_pack[pj.id] = (eff.pack_factor(node_spec),
                                       float(job.bytes_per_lane))
@@ -555,6 +603,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         batch = []
         while heap and heap[0][0] == t:
             batch.append(heapq.heappop(heap))
+        n_events += len(batch)
         acct.decay_to(t)
         for _, _, kind, payload in batch:
             if kind == "submit":
@@ -617,10 +666,11 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         # "spare" events carry no state change — they just give dispatch()
         # a chance to place lane backfills the moment a tail wave opens
         dispatch(t)
-        for _, _, kind, payload in batch:
-            if kind in ("submit", "preempt_check") \
-                    and payload.id in pending_payload:
-                schedule_preempt_check(payload, t)  # still queued: re-arm
+        if preemption is not None:
+            for _, _, kind, payload in batch:
+                if kind in ("submit", "preempt_check") \
+                        and payload.id in pending_payload:
+                    schedule_preempt_check(payload, t)  # still queued: re-arm
 
     for pj in queue.ordered():          # drained heap, still queued: these
         job, _, _ = pending_payload.pop(pj.id)   # can never dispatch
@@ -642,7 +692,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         throughput=completed_tasks / makespan if makespan else 0.0,
         lane_backfills=lane_backfills, preemptions=n_preemptions,
         repacks=n_repacks, spatial_placements=n_spatial,
-        reconfigs=n_reconfigs)
+        reconfigs=n_reconfigs, events=n_events)
 
 
 # ---------------------------------------------------------------------------
@@ -740,6 +790,17 @@ def compare_modes(jobs: List[SimJob], n_nodes: int,
         out["shared+spatial"] = simulate(jobs, n_nodes, node_spec,
                                          mode="shared", admission=admission,
                                          spatial=spatial, **kw)
+    n_layers = (int(lane_refill) + (preemption is not None)
+                + (repack is not None) + (spatial is not None))
+    if n_layers >= 2:
+        # every requested layer at once — the configuration an operator
+        # would actually deploy; the pairwise reports above isolate each
+        # layer's marginal gain, this one prices their interaction
+        out["shared+full"] = simulate(jobs, n_nodes, node_spec,
+                                      mode="shared", admission=admission,
+                                      lane_refill=lane_refill,
+                                      preemption=preemption, repack=repack,
+                                      spatial=spatial, **kw)
     return out
 
 

@@ -8,6 +8,49 @@ from typing import Callable
 import numpy as np
 
 
+def random_tenant_spec(rng, name: str):
+    """Random TenantSpec: weights, kind mixes, optional burst windows."""
+    from repro.core import traces as TR
+    kinds = ["sweep", "train", "serve"]
+    k = int(rng.integers(1, len(kinds) + 1))
+    picked = [kinds[i] for i in sorted(rng.choice(len(kinds), size=k,
+                                                  replace=False))]
+    w = rng.random(k) + 0.1
+    w = w / w.sum()
+    # exact sum-to-1 (spec validates): pin the last weight
+    probs = [float(x) for x in w]
+    probs[-1] = 1.0 - sum(probs[:-1])
+    bursty = bool(rng.random() < 0.4)
+    return TR.TenantSpec(
+        name=name, weight=float(0.5 + rng.random() * 2.0),
+        kinds=tuple(zip(picked, probs)),
+        n_bursts=int(rng.integers(1, 4)) if bursty else 0,
+        burst_len_s=float(30.0 + rng.random() * 200.0),
+        burst_gain=float(2.0 + rng.random() * 8.0))
+
+
+def random_trace_spec(rng, n_jobs: int = 60):
+    """Random TraceSpec for the trace-generator property tests."""
+    from repro.core import traces as TR
+    n_tenants = int(rng.integers(1, 5))
+    tasks_min = int(rng.integers(1, 8))
+    return TR.TraceSpec(
+        name=f"prop{int(rng.integers(1 << 30))}",
+        seed=int(rng.integers(1 << 31)),
+        n_jobs=n_jobs,
+        horizon_s=float(600.0 + rng.random() * 7200.0),
+        tenants=tuple(random_tenant_spec(rng, f"t{i}")
+                      for i in range(n_tenants)),
+        diurnal_amp=float(rng.random()) if rng.random() < 0.5 else 0.0,
+        diurnal_period_s=float(900.0 + rng.random() * 7200.0),
+        tail_alpha=float(0.8 + rng.random() * 2.5),
+        tasks_min=tasks_min,
+        tasks_max=tasks_min + int(rng.integers(1, 512)),
+        task_s_mu=float(rng.random() * 1.5),
+        task_s_sigma=float(0.2 + rng.random()),
+        task_s_max=float(60.0 + rng.random() * 600.0))
+
+
 def given_cases(n: int = 50, seed: int = 0) -> Callable:
     """Decorator: run the test body n times with independent rngs.
     The body receives a np.random.Generator; failures report the case id."""
