@@ -1,4 +1,10 @@
-"""Render the §Roofline table from dry-run artifacts (artifacts/dryrun)."""
+"""Render the §Roofline table from dry-run artifacts (artifacts/dryrun).
+
+``--arch v4|v5e|v5p|v6e`` re-derives the time columns for a different
+TPU generation from the rows' raw per-device quantities (HLO GFLOPs,
+HBM GB, collective GB — machine-independent) and the ``HW.for_arch``
+preset, without re-running the dry run.
+"""
 from __future__ import annotations
 
 import glob
@@ -10,6 +16,30 @@ from typing import List
 COLS = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
         "t_collective_s", "bottleneck", "useful_flops_ratio",
         "roofline_fraction", "peak_mem_gb_dev"]
+
+
+def rescale_rows(rows: List[dict], arch: str) -> List[dict]:
+    """Recompute roofline times/bottleneck for ``arch`` from the raw
+    per-device HLO quantities each row carries."""
+    from repro.roofline.analysis import HW
+    hw = HW.for_arch(arch)
+    out = []
+    for r in rows:
+        r = dict(r)
+        tc = r["hlo_gflops_dev"] * 1e9 / hw.peak_flops
+        tm = r["hbm_gb_dev"] * 1e9 / hw.hbm_bw
+        tx = r["coll_gb_dev"] * 1e9 / hw.ici_bw
+        terms = {"compute": tc, "memory": tm, "collective": tx}
+        t_bound = max(terms.values())
+        r.update(arch=arch, t_compute_s=tc, t_memory_s=tm,
+                 t_collective_s=tx,
+                 bottleneck=max(terms, key=terms.get))
+        if t_bound and r.get("chips"):
+            r["roofline_fraction"] = (
+                r["model_gflops_global"] * 1e9 / r["chips"] / t_bound
+                / hw.peak_flops)
+        out.append(r)
+    return out
 
 
 def load_rows(art_dir: str = "artifacts/dryrun", tag: str = "baseline"
@@ -40,10 +70,15 @@ def markdown_table(rows: List[dict]) -> str:
 
 def run(art_dir: str = "artifacts/dryrun"):
     from benchmarks.common import emit
+    argv = sys.argv[1:]
     rows = load_rows(art_dir)
     if not rows:
         emit("roofline.cells", 0, "no artifacts — run repro.launch.dryrun")
         return []
+    if "--arch" in argv:
+        arch = argv[argv.index("--arch") + 1]
+        rows = rescale_rows(rows, arch)
+        emit("roofline.rescaled_arch", len(rows), arch)
     emit("roofline.cells", len(rows), "")
     # decode cells score ~0 by construction (one token/seq); rank the
     # compute-meaningful train/prefill cells
@@ -65,5 +100,13 @@ def run(art_dir: str = "artifacts/dryrun"):
 
 
 if __name__ == "__main__":
-    rows = load_rows(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    argv = sys.argv[1:]
+    arch = None
+    if "--arch" in argv:
+        i = argv.index("--arch")
+        arch = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    rows = load_rows(argv[0] if argv else "artifacts/dryrun")
+    if arch:
+        rows = rescale_rows(rows, arch)
     print(markdown_table(rows))

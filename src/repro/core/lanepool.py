@@ -84,17 +84,29 @@ class LanePool:
 
     The compiled program is a function of the pool CAPACITY only — not of
     which lanes are live — so a pool outlives every task that passes
-    through it with exactly one trace.
+    through it with exactly one trace ("where"/"kernel" modes) or one
+    trace per occupancy bucket ("compact" mode, ≤ log2(capacity)+1).
+
+    ``exec_mode`` picks how inactive lanes are skipped (see
+    packing.masked_pool_step): "where" (default — step everything,
+    discard), "compact" (gather/scatter a dense sub-batch), or "kernel"
+    (``step_fn`` is pool-level and mask-aware, threading ``active`` into
+    the lane-masked Pallas kernels).
     """
 
     def __init__(self, capacity: int, step_fn: Callable, *,
                  template_params: Any, template_opt: Any,
-                 template_hparams: Any, donate: bool = True):
+                 template_hparams: Any, donate: bool = True,
+                 exec_mode: str = "where"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if exec_mode not in packing.MASKED_MODES:
+            raise ValueError(f"unknown exec_mode {exec_mode!r}; "
+                             f"expected one of {packing.MASKED_MODES}")
         self.capacity = capacity
         self._step_fn = step_fn         # kept for resized()
         self._donate = donate
+        self.exec_mode = exec_mode
         self.params = packing.stack_trees([template_params] * capacity)
         self.opt_state = packing.stack_trees([template_opt] * capacity)
         self.hparams = packing.stack_trees([template_hparams] * capacity)
@@ -102,11 +114,12 @@ class LanePool:
         self.owner: List[Optional[int]] = [None] * capacity   # task id
         self._n_traces = 0
 
-        def counted(params, opt_state, batch, hparams):
+        def counted(*args):
             self._n_traces += 1         # runs at TRACE time only
-            return step_fn(params, opt_state, batch, hparams)
+            return step_fn(*args)
 
-        self._step = packing.packed_masked_step(counted, donate=donate)
+        self._step = packing.masked_pool_step(counted, mode=exec_mode,
+                                              donate=donate)
 
     # ------------------------------------------------------------- lifecycle
     @property
@@ -125,7 +138,7 @@ class LanePool:
                         template_opt=packing.tree_get_lane(self.opt_state, 0),
                         template_hparams=packing.tree_get_lane(
                             self.hparams, 0),
-                        donate=self._donate)
+                        donate=self._donate, exec_mode=self.exec_mode)
 
     def free_lanes(self) -> List[int]:
         return [i for i in range(self.capacity) if not self.active[i]]
@@ -161,8 +174,12 @@ class LanePool:
         axis at capacity; inactive lanes' entries may be any benign values
         (their state passes through and their metrics are discarded).
         Raises PoolStepError (chaining the original) if the compiled step
-        itself fails — an event that concerns every lane at once."""
-        mask = jnp.asarray(self.active)
+        itself fails — an event that concerns every lane at once.
+
+        The mask is handed over as host numpy: the "compact" mode needs it
+        host-side to pick the occupancy bucket without a device sync, and
+        jit converts it on entry for the other modes."""
+        mask = np.array(self.active)
         try:
             self.params, self.opt_state, metrics = self._step(
                 self.params, self.opt_state, batch, self.hparams, mask)

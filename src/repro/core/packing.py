@@ -11,6 +11,23 @@ identical to K sequential trainings lane-by-lane.
 
 Per-lane hyperparameters (e.g. learning rate for parametric sweeps — the
 paper's headline use case) ride along as vmapped scalars.
+
+Masked execution comes in three modes (``masked_pool_step``):
+
+  * "where"   — step every lane, keep inactive lanes' old state with
+    ``jnp.where``. One compile ever; garbage on dead lanes cannot leak in,
+    but dead lanes are NOT free: a pool at 50% occupancy still pays 100%
+    of the compute and HBM traffic.
+  * "compact" — gather the active lanes into a dense power-of-two-sized
+    sub-batch, step only that, scatter back (``packed_compact_step``).
+    Dead-lane work is actually skipped; compiles once per occupancy
+    bucket (≤ log2(capacity)+1 traces total).
+  * "kernel"  — the step itself is mask-aware and threads the per-lane
+    predicate into the Pallas kernels (kernels/ops.py ``active=``), which
+    skip inactive tiles inside the grid. One compile ever AND dead-lane
+    compute skipped, on hardware that runs the kernels.
+
+See DESIGN.md §12 for the decision rule.
 """
 from __future__ import annotations
 
@@ -20,6 +37,7 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def stack_trees(trees: Sequence[Any]) -> Any:
@@ -89,6 +107,118 @@ def packed_masked_step(step_fn: Callable, *, donate: bool = True) -> Callable:
     """
     v = jax.vmap(masked_step(step_fn))
     return jax.jit(v, donate_argnums=(0, 1) if donate else ())
+
+
+def occupancy_bucket(n_active: int, capacity: int) -> int:
+    """Smallest power of two >= n_active, capped at capacity — the dense
+    sub-batch size the compacted step actually runs. Bucketing keeps the
+    number of compiled programs at most log2(capacity)+1 while occupancy
+    wanders freely."""
+    if n_active < 1:
+        raise ValueError("occupancy_bucket needs >= 1 active lane")
+    b = 1
+    while b < n_active:
+        b *= 2
+    return min(b, capacity)
+
+
+def packed_compact_step(step_fn: Callable, *, donate: bool = True) -> Callable:
+    """Lane-compaction masked step: gather active lanes, step a DENSE
+    sub-batch, scatter back. Same signature as ``packed_masked_step``'s
+    result, but dead lanes cost nothing.
+
+    The gather indices are host-side (the pool's mask is host numpy), so
+    the dense sub-batch size is static per call; it is rounded up to an
+    occupancy bucket (power of two, capped at capacity) and padded by
+    REPEATING active lanes. A repeated lane computes bit-identical values
+    from identical inputs, so the duplicate scatter writes agree and the
+    result is deterministic. Inactive lanes are never gathered: their
+    state passes through bit-identically via the scatter-onto-old-trees
+    (and their metrics are zeros, not garbage — stronger than "where").
+
+    Compiles once per distinct bucket; attach/detach within a bucket
+    reuses the compiled program.
+    """
+    compiled: dict = {}
+
+    def _make(bucket: int):
+        def run(params, opt_state, batch, hparams, idx):
+            cap = jax.tree_util.tree_leaves(params)[0].shape[0]
+            gather = lambda t: jax.tree_util.tree_map(lambda a: a[idx], t)
+            new_p, new_o, m = jax.vmap(step_fn)(
+                gather(params), gather(opt_state), gather(batch),
+                gather(hparams))
+            scat = lambda full, sub: jax.tree_util.tree_map(
+                lambda f, s: f.at[idx].set(s), full, sub)
+            metrics = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((cap,) + a.shape[1:],
+                                    a.dtype).at[idx].set(a), m)
+            return scat(params, new_p), scat(opt_state, new_o), metrics
+        return jax.jit(run, donate_argnums=(0, 1) if donate else ())
+
+    def step(params, opt_state, batch, hparams, active):
+        mask = np.asarray(active, bool)
+        lanes = np.flatnonzero(mask)
+        if lanes.size == 0:
+            raise ValueError(
+                "compacted masked step requires >= 1 active lane "
+                "(an all-inactive pool step is a no-op; skip it)")
+        bucket = occupancy_bucket(int(lanes.size), int(mask.shape[0]))
+        idx = jnp.asarray(np.resize(lanes, bucket))   # pad by repetition
+        fn = compiled.get(bucket)
+        if fn is None:
+            fn = compiled[bucket] = _make(bucket)
+        return fn(params, opt_state, batch, hparams, idx)
+
+    return step
+
+
+def packed_kernel_step(pool_step_fn: Callable, *, donate: bool = True) -> Callable:
+    """Masked step for a POOL-LEVEL, mask-aware step function.
+
+    ``pool_step_fn(params, opt_state, batch, hparams, active) -> (params,
+    opt_state, metrics)`` operates on the stacked lane axis directly (no
+    vmap) and threads ``active`` into lane-masked kernels
+    (kernels.ops.packed_matmul / packed_norm with ``active=``), so
+    inactive lanes' tiles are skipped inside the kernel grid. This
+    wrapper adds the same bit-exact guarantee as ``masked_step``: whatever
+    the step computes for dead lanes (zeros, by the kernels' contract) is
+    discarded and the old state kept. One compile ever, like "where".
+    """
+    def step(params, opt_state, batch, hparams, active):
+        new_p, new_o, metrics = pool_step_fn(params, opt_state, batch,
+                                             hparams, active)
+        def keep(new, old):
+            m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+        return (jax.tree_util.tree_map(keep, new_p, params),
+                jax.tree_util.tree_map(keep, new_o, opt_state),
+                metrics)
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+MASKED_MODES = ("where", "compact", "kernel")
+
+
+def masked_pool_step(step_fn: Callable, *, mode: str = "where",
+                     donate: bool = True) -> Callable:
+    """Build the pool's masked step in the requested execution mode.
+
+    All modes share one signature — ``(params, opt_state, batch, hparams,
+    active_mask) -> (params, opt_state, metrics)`` with a leading lane
+    axis everywhere — and one contract: active lanes step exactly as an
+    unmasked run would, inactive lane state is bit-identical passthrough.
+    ``step_fn`` is per-lane for "where"/"compact"; for "kernel" it is the
+    pool-level mask-aware step described in ``packed_kernel_step``.
+    """
+    if mode == "where":
+        return packed_masked_step(step_fn, donate=donate)
+    if mode == "compact":
+        return packed_compact_step(step_fn, donate=donate)
+    if mode == "kernel":
+        return packed_kernel_step(step_fn, donate=donate)
+    raise ValueError(f"unknown masked execution mode {mode!r}; "
+                     f"expected one of {MASKED_MODES}")
 
 
 def packed_step(step_fn: Callable, *, donate: bool = True,

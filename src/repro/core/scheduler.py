@@ -229,6 +229,13 @@ class GangJob:
                                        # [0, 1] for the spatial mode planner
                                        # (0 = compute-bound; telemetry may
                                        # raise the effective score)
+    kind: str = ""                     # job family ("train"/"serve"/...):
+                                       # measured intensity is shared across
+                                       # one family via key "kind:<kind>"
+    intensity_profile: Optional[Any] = None
+                                       # roofline.IntensityProfile of the
+                                       # job's compiled step; recorded into
+                                       # admission at FIRST dispatch
     state: str = "queued"              # queued|running|done|rejected
     reject_reason: str = ""
     result: Optional[JobResult] = None
@@ -591,7 +598,8 @@ class TriplesScheduler:
     # ----------------------------------------------------- multi-tenant path
     def submit(self, user: str, tasks: List[Task], trip: T.Triples,
                bytes_per_lane: float = 0.0,
-               interference: float = 0.0) -> GangJob:
+               interference: float = 0.0, kind: str = "",
+               intensity_profile: Optional[Any] = None) -> GangJob:
         """Enqueue a gang job for the fair-share queue (requires tenancy).
 
         Memory-aware admission runs HERE — an over-footprint pack_factor is
@@ -603,7 +611,16 @@ class TriplesScheduler:
         TIGHTENS the decision when the live footprint grew past the
         compile-time profile and fills in an unknown profile, but never
         relaxes a pessimistic static profile (the measurement is keyed
-        per tenant and may come from a different job of theirs)."""
+        per tenant and may come from a different job of theirs).
+
+        ``intensity_profile`` (roofline.IntensityProfile of the job's
+        compiled step, e.g. ``IntensityProfile.from_compiled``) closes
+        the same loop for the PLANNER: its memory-bound fraction is
+        recorded into admission at the job's first dispatch
+        (``record_intensity``) so later mode decisions for this tenant —
+        and for the whole ``kind`` family when one is named — price
+        interference from what the program measurably does on the chip
+        instead of the occupancy proxy."""
         if self.tenancy is None:
             raise RuntimeError("submit() requires a Tenancy; use "
                                "run_triples_job for the single-user path")
@@ -612,7 +629,8 @@ class TriplesScheduler:
             bytes_per_lane = adm.effective_bytes(user, bytes_per_lane)
         job = GangJob(id=self._next_job_id, user=user, tasks=tasks,
                       trip=trip, bytes_per_lane=bytes_per_lane,
-                      interference=interference)
+                      interference=interference, kind=kind,
+                      intensity_profile=intensity_profile)
         self._next_job_id += 1
         self._jobs[job.id] = job
         if trip.nnode > self.cluster.n_nodes:
@@ -640,6 +658,21 @@ class TriplesScheduler:
             n_slots=trip.total_slots, n_tasks=len(tasks), payload=job))
         self._log("submit", job=job.id, user=user, nodes=trip.nnode)
         return job
+
+    def _record_intensity(self, job: GangJob):
+        """First-dispatch hook: flow the job's roofline IntensityProfile
+        into admission (keyed by owner, and by ``kind:<kind>`` when the
+        job names a family) — the planner-side mirror of repack's
+        ``record_measured``. Idempotent; later dispatches of the same
+        profile just rewrite the same number."""
+        adm = self.tenancy.admission if self.tenancy else None
+        prof = job.intensity_profile
+        if adm is None or prof is None:
+            return
+        frac = float(prof.interference)
+        adm.record_intensity(job.user, frac)
+        if job.kind:
+            adm.record_intensity(f"kind:{job.kind}", frac)
 
     def _lane_backfill_admit(self, runs: Dict[int, "_GangRun"],
                              hosts: Dict[int, GangJob]):
@@ -696,10 +729,22 @@ class TriplesScheduler:
                 return
             k = len(group)
             profiles = []
+            adm = tn.admission
             for pj in group:
                 job: GangJob = pj.payload
                 intensity = job.interference
-                if tn.gauges is not None:  # telemetry may raise the score
+                # a roofline-MEASURED memory-bound fraction (recorded at
+                # first dispatch) replaces the occupancy proxy; the EWMA
+                # only speaks for jobs nothing has measured yet
+                measured = None
+                if adm is not None:
+                    if job.kind:
+                        measured = adm.measured_intensity(f"kind:{job.kind}")
+                    if measured is None:
+                        measured = adm.measured_intensity(job.user)
+                if measured is not None:
+                    intensity = max(intensity, measured)
+                elif tn.gauges is not None:
                     intensity = max(intensity,
                                     tn.gauges.user_occupancy(job.user))
                 profiles.append(spatial.JobProfile(
@@ -707,7 +752,8 @@ class TriplesScheduler:
                     n_tasks=pj.n_tasks or len(job.tasks) or 1,
                     bytes_per_lane=pj.bytes_per_lane,
                     intensity=min(1.0, intensity),
-                    want_lanes=pj.n_slots or len(job.tasks) or 1))
+                    want_lanes=pj.n_slots or len(job.tasks) or 1,
+                    kind=job.kind))
             decision = planner.plan_node(profiles)
             if decision.mode != "spatial":
                 if k == 1:              # this job prefers temporal: let it
@@ -755,6 +801,8 @@ class TriplesScheduler:
                 st.granted_lanes[job.id] = lanes
                 first = job.id not in st.first_dispatch
                 st.first_dispatch.setdefault(job.id, st.rnd)
+                if first:
+                    self._record_intensity(job)
                 self._log("spatial_dispatch", job=job.id, user=job.user,
                           node=node, slices=list(indices), lanes=lanes,
                           resumed=ckpt is not None)
@@ -968,6 +1016,8 @@ class TriplesScheduler:
                 granted_lanes.pop(job.id, None)
                 first = job.id not in st.first_dispatch
                 st.first_dispatch.setdefault(job.id, rnd)
+                if first:
+                    self._record_intensity(job)
                 if tn.gauges is not None:
                     # the wait distribution samples FIRST dispatch only —
                     # a resume is the same job coming back, not a new wait
@@ -1027,6 +1077,8 @@ class TriplesScheduler:
                     dispatch_round[job.id] = rnd
                     first = job.id not in st.first_dispatch
                     st.first_dispatch.setdefault(job.id, rnd)
+                    if first:
+                        self._record_intensity(job)
                     if tn.gauges is not None:
                         tn.gauges.on_dispatch(
                             job.user, nodes=0, lanes=granted,

@@ -401,7 +401,9 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                     # re-priced at its full original task count
                     bytes_per_lane=float(pj.bytes_per_lane),
                     intensity=min(1.0, max(0.0, job.interference)),
-                    task_s=job.task_s, want_lanes=eff.total_slots))
+                    task_s=job.task_s, want_lanes=eff.total_slots,
+                    kind=job.kind))
+            prof_by_id = {p.job_id: p for p in profiles}
             plan = spatial.plan_node(profiles)
             if plan.mode != "spatial":
                 if k == 1:              # this job prefers temporal: let it
@@ -420,8 +422,12 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                 job, eff, _ = pending_payload.pop(pj.id)
                 lanes = max(1, plan.lanes_of(job.id))
                 mine = [p for p in plan.placements if p.job_id == job.id]
-                slow = max(spatial.slice_slowdown(
-                    p, min(1.0, max(0.0, job.interference))) for p in mine)
+                # price with the planner's EFFECTIVE intensity (the same
+                # number plan_node costed with): identical to the raw
+                # declared interference when no interference source is
+                # wired, roofline-measured when one is
+                eff_int = spatial._intensity(prof_by_id[job.id])
+                slow = max(spatial.slice_slowdown(p, eff_int) for p in mine)
                 waves = math.ceil((pj.n_tasks or job.n_tasks) / lanes)
                 duration = waves * job.task_s * slow + plan.reconfig_s
                 end = now + duration

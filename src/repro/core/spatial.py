@@ -147,7 +147,11 @@ class JobProfile:
     share (0 = compute-bound and polite, 1 = fully memory-bound). The
     default live source is the job owner's gang occupancy-EWMA
     (``monitor.TenantGauges.user_occupancy``); workloads that know
-    their phase behaviour pass an explicit score.
+    their phase behaviour pass an explicit score, and jobs whose
+    compiled program has been roofline-profiled get a MEASURED score
+    via ``measured_interference``. ``kind`` names the job family
+    ("train"/"serve"/"sweep"/...) so measured intensity can be shared
+    across jobs of one family (admission key ``kind:<kind>``).
     """
     job_id: int
     user: str = ""
@@ -156,6 +160,7 @@ class JobProfile:
     intensity: float = 0.0
     task_s: float = 1.0                 # est seconds (or rounds) per task
     want_lanes: int = 0                 # requested concurrency (0 = n_tasks)
+    kind: str = ""                      # job family for measured intensity
 
     def __post_init__(self):
         if not 0 <= self.intensity <= 1:
@@ -519,6 +524,36 @@ def ewma_interference(gauges, floor: float = 0.0
 
     def score(p: JobProfile) -> float:
         occ = float(gauges.user_occupancy(p.user)) if p.user else 0.0
+        return min(1.0, max(p.intensity, occ, floor))
+
+    return score
+
+
+def measured_interference(admission, gauges=None, floor: float = 0.0
+                          ) -> Callable[[JobProfile], float]:
+    """Roofline-measured interference source, composed with the EWMA.
+
+    ``admission`` is a ``MemoryAdmission`` whose ``measured_intensity``
+    holds recorded memory-bound fractions (``IntensityProfile``, recorded
+    at first dispatch). For a profile whose job family (key
+    ``kind:<kind>``) or owner (key ``<user>``) has a measurement, that
+    measurement REPLACES the occupancy proxy: a busy but compute-bound
+    tenant stops being priced as thrashy, and a quiet memory-bound one
+    stops hiding behind a cold EWMA. The profile's declared intensity and
+    ``floor`` still lower-bound the score either way. With no measurement
+    the score is exactly ``ewma_interference``'s (or the declared
+    intensity when no gauges are wired), so disabling the signal — not
+    recording anything — reproduces the default planner bit-for-bit.
+    """
+
+    def score(p: JobProfile) -> float:
+        m = admission.measured_intensity(f"kind:{p.kind}") if p.kind else None
+        if m is None and p.user:
+            m = admission.measured_intensity(p.user)
+        if m is not None:
+            return min(1.0, max(p.intensity, float(m), floor))
+        occ = (float(gauges.user_occupancy(p.user))
+               if (gauges is not None and p.user) else 0.0)
         return min(1.0, max(p.intensity, occ, floor))
 
     return score

@@ -223,6 +223,7 @@ class MemoryAdmission:
         self.node_spec = node_spec or T.NodeSpec()
         self.headroom = headroom
         self.measured: Dict[str, float] = {}    # key -> measured B/lane
+        self.intensity: Dict[str, float] = {}   # key -> memory-bound frac
 
     # -------------------------------------------- measured footprints
     def record_measured(self, key: str, bytes_per_lane: float):
@@ -251,6 +252,26 @@ class MemoryAdmission:
         if static_bytes <= 0:
             return m
         return max(m, static_bytes)
+
+    # -------------------------------------------- measured intensity
+    def record_intensity(self, key: str, memory_bound_frac: float):
+        """Record a roofline-MEASURED memory-bound fraction for ``key``
+        (``IntensityProfile.memory_bound_frac``, recorded by the
+        scheduler at a job's first dispatch the same way repack events
+        call ``record_measured``). Unlike footprints this is not a safety
+        bound but a planning signal, and it is exact for the compiled
+        program it came from — so the newest measurement simply replaces
+        the old (a job family that changes phase re-measures both ways)."""
+        if key and memory_bound_frac >= 0.0:
+            self.intensity[key] = min(1.0, float(memory_bound_frac))
+
+    def measured_intensity(self, key: str) -> Optional[float]:
+        """The measured memory-bound fraction for ``key``, or None when
+        nothing was ever recorded (callers fall back to the
+        occupancy-EWMA proxy — spatial.measured_interference)."""
+        if not key:
+            return None
+        return self.intensity.get(key)
 
     def max_pack(self, bytes_per_lane: float) -> int:
         """Largest lanes-per-chip count the footprint allows (0 = none)."""

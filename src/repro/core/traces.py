@@ -44,7 +44,7 @@ from . import triples as T
 __all__ = [
     "TenantSpec", "TraceSpec", "ReplayConfig", "generate",
     "save_jsonl", "load_jsonl", "trace_path",
-    "CANONICAL", "REPLAY", "replay_kwargs",
+    "CANONICAL", "REPLAY", "KIND_INTENSITY", "replay_kwargs",
     "perf_spec", "scaled_to_utilization", "offered_node_seconds",
 ]
 
@@ -134,6 +134,25 @@ class ReplayConfig:
                                         # target_util x capacity — without
                                         # this the suite has zero queueing
                                         # and the wait metrics gate nothing
+    roofline: bool = False              # feed the mode planner the
+                                        # roofline-measured per-kind
+                                        # intensity (KIND_INTENSITY) via
+                                        # spatial.measured_interference
+                                        # instead of declared-only scores
+
+
+# Roofline-measured memory-bound fraction per job kind — the simulator's
+# stand-in for the live record-at-first-dispatch path (the scheduler
+# records IntensityProfile.memory_bound_frac under key "kind:<kind>").
+# Values are what IntensityProfile.from_compiled reports for the three
+# program families on the default HW preset: decode-style serve steps are
+# HBM-bandwidth-bound, packed training steps are MXU-bound, small sweep
+# steps sit in between.
+KIND_INTENSITY: Dict[str, float] = {
+    "serve": 0.85,
+    "train": 0.05,
+    "sweep": 0.35,
+}
 
 
 def replay_kwargs(cfg: ReplayConfig) -> dict:
@@ -149,7 +168,14 @@ def replay_kwargs(cfg: ReplayConfig) -> dict:
         kw["repack"] = RepackPolicy()
     if cfg.spatial:
         from . import spatial as sp
-        kw["spatial"] = sp.ModePlanner()
+        if cfg.roofline:
+            adm = ten.MemoryAdmission()
+            for kind, frac in KIND_INTENSITY.items():
+                adm.record_intensity(f"kind:{kind}", frac)
+            kw["spatial"] = sp.ModePlanner(
+                admission=adm, interference=sp.measured_interference(adm))
+        else:
+            kw["spatial"] = sp.ModePlanner()
     return kw
 
 
@@ -439,6 +465,19 @@ CANONICAL: Dict[str, TraceSpec] = {
         name="heavy_tail", seed=19, n_jobs=400, horizon_s=5400.0,
         tail_alpha=1.1, tasks_max=2048,
         tenants=tuple(TenantSpec(f"u{i}", kinds=_MIX) for i in range(5))),
+    # memory-bound (serve-heavy decode tenant) against compute-bound
+    # (train-heavy pretrain tenant): the mix where the roofline-measured
+    # intensity signal (ReplayConfig.roofline + KIND_INTENSITY) changes
+    # planner decisions — serve jobs get quarantined onto slices, train
+    # jobs keep packing (ROADMAP item 3 / ISSUE 7)
+    "roofline_mix": TraceSpec(
+        name="roofline_mix", seed=23, n_jobs=360, horizon_s=5400.0,
+        tenants=(TenantSpec("decode", weight=1.2,
+                            kinds=(("serve", 0.8), ("sweep", 0.2))),
+                 TenantSpec("pretrain",
+                            kinds=(("train", 0.7), ("sweep", 0.3))),
+                 TenantSpec("mixed", kinds=_MIX)),
+        tasks_max=96),
 }
 
 REPLAY: Dict[str, ReplayConfig] = {
@@ -447,6 +486,8 @@ REPLAY: Dict[str, ReplayConfig] = {
     "diurnal": ReplayConfig(n_nodes=24, target_util=0.9),
     "bursty_tenant": ReplayConfig(n_nodes=24, target_util=0.9),
     "heavy_tail": ReplayConfig(n_nodes=32, target_util=1.2),
+    "roofline_mix": ReplayConfig(n_nodes=16, target_util=0.95,
+                                 roofline=True),
 }
 
 

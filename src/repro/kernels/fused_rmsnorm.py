@@ -5,6 +5,11 @@ mean, rsqrt, mul ×2) — each a full HBM round-trip of the activation. The
 fused kernel reads x once and writes once; the row statistics live in
 registers/VMEM. Rows are tiled (block_rows, d); d is the minor 128-lane
 dim. Oracle: models.layers.rms_norm.
+
+``packed_rmsnorm`` is the lane-batched variant for the pool hot path:
+x (J, rows, d) with per-lane weights (J, d) and an optional per-lane
+``active`` predicate (SMEM), so a partially-occupied lane pool normalizes
+only live lanes — the same masking contract as packed_gemm's.
 """
 from __future__ import annotations
 
@@ -51,3 +56,54 @@ def fused_rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
         interpret=interpret,
     )(x2, w)
     return out[:rows].reshape(orig_shape)
+
+
+def _packed_rmsnorm_kernel(x_ref, w_ref, act_ref, o_ref, *, eps: float):
+    ji = pl.program_id(0)
+
+    @pl.when(act_ref[ji] != 0)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)               # (br, d)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        out = x * jax.lax.rsqrt(var + eps)
+        o_ref[0] = (out * w_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+    @pl.when(act_ref[ji] == 0)
+    def _zero():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+
+def packed_rmsnorm(x: jax.Array, w: jax.Array, *,
+                   active: jax.Array | None = None, eps: float = 1e-5,
+                   block_rows: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """x (J, rows, d) normalized with per-lane weights w (J, d).
+
+    ``active`` (bool/int (J,), optional): inactive lanes' outputs are
+    exact zeros and their rows do no arithmetic. Active lanes match
+    fused_rmsnorm on the corresponding slice bit-for-bit (same kernel
+    body, same f32 statistics).
+    """
+    J, rows, d = x.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    if active is None:
+        act = jnp.ones((J,), jnp.int32)
+    else:
+        act = jnp.asarray(active, jnp.int32).reshape(J)
+    grid = (J, (rows + pad) // br)
+    out = pl.pallas_call(
+        functools.partial(_packed_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, br, d), lambda j, i: (j, i, 0)),
+                  pl.BlockSpec((1, d), lambda j, i: (j, 0)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((1, br, d), lambda j, i: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((J, rows + pad, d), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x, w, act)
+    return out[:, :rows]

@@ -4,6 +4,15 @@
 "pallas_interpret". The flash-attention wrapper carries a custom_vjp whose
 backward is recompute through the memory-efficient jnp path, so the kernels
 are usable inside train_step.
+
+Lane masking: ``packed_matmul``/``packed_norm`` accept a per-lane
+``active`` predicate. On the Pallas path the mask is fused into the
+kernel (inactive grid tiles skip the MXU/VPU work — packed_gemm /
+packed_rmsnorm masked variants); on the XLA fallback it is a post-hoc
+where-zero, semantically identical but not cheaper. These are the
+building blocks of the pool's three masked-execution modes — "where",
+"compact" and "kernel" — dispatched by core.packing.masked_pool_step
+(see DESIGN.md §12 for when each wins).
 """
 from __future__ import annotations
 
@@ -66,10 +75,32 @@ def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
 # packed (multi-job) GEMM
 # ---------------------------------------------------------------------------
 
-def packed_matmul(x, w, *, interpret: bool = False):
-    """x (J,M,K) @ w (J,K,N) per job."""
+def packed_matmul(x, w, *, active=None, interpret: bool = False):
+    """x (J,M,K) @ w (J,K,N) per job. ``active`` (bool/int (J,), optional)
+    zeroes inactive lanes — fused into the kernel on the Pallas path,
+    where-masked on the XLA fallback."""
     if _use_pallas(interpret):
         from repro.kernels.packed_gemm import packed_gemm
-        return packed_gemm(x, w, interpret=interpret)
+        return packed_gemm(x, w, active=active, interpret=interpret)
     from repro.kernels.ref import packed_gemm_ref
-    return packed_gemm_ref(x, w)
+    out = packed_gemm_ref(x, w)
+    if active is not None:
+        mask = jnp.asarray(active).reshape(-1, 1, 1) != 0
+        out = jnp.where(mask, out, jnp.zeros((), out.dtype))
+    return out
+
+
+def packed_norm(x, w, *, active=None, eps: float = 1e-5,
+                interpret: bool = False):
+    """Lane-batched RMSNorm: x (J,rows,d), per-lane weights w (J,d).
+    Same ``active`` contract as packed_matmul (inactive lanes -> zeros)."""
+    if _use_pallas(interpret):
+        from repro.kernels.fused_rmsnorm import packed_rmsnorm
+        return packed_rmsnorm(x, w, active=active, eps=eps,
+                              interpret=interpret)
+    from repro.models.layers import rms_norm
+    out = jax.vmap(lambda xi, wi: rms_norm(xi, wi, eps))(x, w)
+    if active is not None:
+        mask = jnp.asarray(active).reshape(-1, 1, 1) != 0
+        out = jnp.where(mask, out, jnp.zeros((), out.dtype))
+    return out

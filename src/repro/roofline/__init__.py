@@ -1,2 +1,3 @@
 from repro.roofline.analysis import (  # noqa: F401
-    HW, RooflineReport, analyze_compiled, parse_collectives, model_flops)
+    HW, IntensityProfile, RooflineReport, analyze_compiled,
+    parse_collectives, model_flops)

@@ -22,7 +22,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-# ---- hardware constants (TPU v5e, per chip) --------------------------------
+# ---- hardware constants (per chip; default preset is TPU v5e) --------------
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +31,31 @@ class HW:
     hbm_bw: float = 819e9             # bytes/s
     ici_bw: float = 50e9              # bytes/s per link
     hbm_bytes: float = 16e9
+
+    @classmethod
+    def for_arch(cls, arch: str) -> "HW":
+        """Preset registry — the roofline terms are only meaningful
+        relative to a concrete chip, so benches/tables take an ``--arch``
+        flag instead of silently assuming v5e."""
+        try:
+            return cls(**_HW_PRESETS[arch])
+        except KeyError:
+            raise ValueError(
+                f"unknown arch {arch!r}; known presets: "
+                f"{sorted(_HW_PRESETS)}") from None
+
+
+# Public per-chip numbers: bf16 peak, HBM bandwidth, per-link ICI, HBM size.
+_HW_PRESETS: Dict[str, dict] = {
+    "v4": dict(peak_flops=275e12, hbm_bw=1228e9, ici_bw=50e9,
+               hbm_bytes=32e9),
+    "v5e": dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+                hbm_bytes=16e9),
+    "v5p": dict(peak_flops=459e12, hbm_bw=2765e9, ici_bw=100e9,
+                hbm_bytes=95e9),
+    "v6e": dict(peak_flops=918e12, hbm_bw=1640e9, ici_bw=100e9,
+                hbm_bytes=32e9),
+}
 
 
 _DTYPE_BYTES = {
@@ -278,3 +303,53 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
         xla_bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
         bytes_by_tag=dict(hc.bytes_by_tag),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class IntensityProfile:
+    """A job's measured compute-vs-memory character, distilled from its
+    compiled program's roofline terms — the per-job signal the
+    ``ModePlanner`` consumes (core/spatial.py ``measured_interference``).
+
+    ``arithmetic_intensity`` is FLOPs per HBM byte (the roofline x-axis);
+    ``memory_bound_frac`` is the share of the three roofline terms spent
+    in HBM — near 1 for decode-style bandwidth-bound steps, near 0 for
+    MXU-bound packed training. The latter is what the planner uses: two
+    memory-bound jobs sharing a chip contend for the one resource that is
+    already the bottleneck, while compute-bound jobs pack benignly.
+    """
+    arithmetic_intensity: float
+    memory_bound_frac: float
+    bottleneck: str
+
+    @classmethod
+    def from_report(cls, r: RooflineReport) -> "IntensityProfile":
+        ai = (r.flops_per_dev / r.bytes_per_dev) if r.bytes_per_dev else 0.0
+        total = r.t_compute + r.t_memory + r.t_collective
+        mbf = (r.t_memory / total) if total else 0.0
+        return cls(arithmetic_intensity=ai, memory_bound_frac=mbf,
+                   bottleneck=r.bottleneck)
+
+    @classmethod
+    def from_compiled(cls, compiled, hw: Optional[HW] = None) -> "IntensityProfile":
+        """Directly from a compiled XLA program (no model metadata needed)
+        — the form the scheduler records at first dispatch, the way
+        ``MemoryAdmission.record_measured`` records HBM bytes."""
+        from repro.roofline.hlo_costs import analyze_hlo
+        hc = analyze_hlo(compiled.as_text())
+        hw = hw or HW()
+        tc = hc.flops / hw.peak_flops
+        tm = hc.hbm_bytes / hw.hbm_bw
+        tl = hc.collective_operand_bytes / hw.ici_bw
+        total = tc + tm + tl
+        terms = {"compute": tc, "memory": tm, "collective": tl}
+        return cls(
+            arithmetic_intensity=(hc.flops / hc.hbm_bytes)
+            if hc.hbm_bytes else 0.0,
+            memory_bound_frac=(tm / total) if total else 0.0,
+            bottleneck=max(terms, key=terms.get))
+
+    @property
+    def interference(self) -> float:
+        """The planner-facing interference intensity in [0, 1]."""
+        return min(1.0, max(0.0, self.memory_bound_frac))

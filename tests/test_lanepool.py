@@ -265,6 +265,127 @@ def test_attach_occupied_lane_raises():
 
 
 # ---------------------------------------------------------------------------
+# masked execution modes (PR 7): where / compact / kernel equivalence
+# ---------------------------------------------------------------------------
+
+def _pool_mode(step, init, opt, capacity, mode):
+    tmpl = init(jax.random.PRNGKey(0))
+    return LanePool(capacity, step, template_params=tmpl,
+                    template_opt=opt.init(tmpl),
+                    template_hparams=jnp.float32(0.0), exec_mode=mode)
+
+
+def test_compact_mode_bit_identical_through_refill():
+    """The full executor lifecycle (skewed budgets, attach/detach churn)
+    produces bit-identical per-task losses in "where" and "compact"
+    modes, and compact compiles at most log2(capacity)+1 programs."""
+    init, opt, step = _setup()
+    CAP = 4
+    mk = lambda: [_lane_task(init, opt, i, steps=1 + (5 * i) % 7)
+                  for i in range(3 * CAP)]
+    ref_losses, ref_stats, _ = _run_collect(
+        mk(), _pool_mode(step, init, opt, CAP, "where"))
+    got_losses, got_stats, _ = _run_collect(
+        mk(), _pool_mode(step, init, opt, CAP, "compact"))
+    assert set(got_losses) == set(ref_losses)
+    for tid in ref_losses:
+        np.testing.assert_array_equal(np.float32(ref_losses[tid]),
+                                      np.float32(got_losses[tid]))
+    assert ref_stats.lane_steps == got_stats.lane_steps
+    assert got_stats.n_traces <= 3   # buckets {1, 2, 4} at capacity 4
+
+
+def test_compact_mode_traces_once_per_occupancy_bucket():
+    init, opt, step = _setup()
+    pool = _pool_mode(step, init, opt, 4, "compact")
+    tasks = [_lane_task(init, opt, i, 99) for i in range(4)]
+
+    def step_pool(n_att):
+        batch = packing.stack_trees(
+            [jax.tree_util.tree_map(jnp.asarray, _batch(i, 0))
+             for i in range(4)])
+        pool.step(batch)
+
+    for n, want in ((1, 1), (2, 2), (3, 3), (4, 3)):  # buckets 1,2,4,4
+        for lane in range(n - 1 if n > 1 else 0, n):
+            if lane not in pool.active_lanes():
+                pool.attach(lane, n * 10 + lane, *tasks[lane].init_fn(),
+                            tasks[lane].hparams)
+        step_pool(n)
+        assert pool.n_traces == want, (n, pool.n_traces)
+    # repeat steps at seen occupancies: no new traces
+    pool.detach(3)
+    step_pool(3)
+    pool.detach(2)
+    step_pool(2)
+    assert pool.n_traces == 3
+
+
+def test_kernel_mode_pool_freezes_inactive_lanes():
+    """exec_mode="kernel" takes a POOL-LEVEL mask-aware step; inactive
+    lane state must pass through bit-identically and active lanes match
+    the same step run dense."""
+    from repro.kernels import ops as kops
+
+    def pool_step(params, opt_state, batch, hp, active):
+        pred = kops.packed_matmul(batch["x"], params["w"], active=active,
+                                  interpret=True)
+        err = pred - batch["y"]
+        xt = jnp.swapaxes(batch["x"], -1, -2)
+        grad = kops.packed_matmul(xt, err, active=active,
+                                  interpret=True) / batch["x"].shape[-2]
+        loss = jnp.mean(err * err, axis=(-1, -2))
+        return ({"w": params["w"] - hp.reshape(-1, 1, 1) * grad},
+                {"m": opt_state["m"] * 0.9 + loss * 0.1}, {"loss": loss})
+
+    J, nb, d = 3, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    tmpl_p = {"w": jax.random.normal(ks[0], (d, d)) * 0.1}
+    pool = LanePool(J, pool_step, template_params=tmpl_p,
+                    template_opt={"m": jnp.float32(0.0)},
+                    template_hparams=jnp.float32(0.0), exec_mode="kernel")
+    lane_p = {"w": jax.random.normal(ks[1], (d, d)) * 0.1}
+    pool.attach(0, 0, lane_p, {"m": jnp.float32(0.0)}, jnp.float32(1e-2))
+    pool.attach(2, 2, jax.tree_util.tree_map(lambda a: a + 0.5, lane_p),
+                {"m": jnp.float32(0.0)}, jnp.float32(1e-2))
+    before_lane1 = jax.tree_util.tree_map(np.asarray, pool.params)
+    batch = {"x": jax.random.normal(ks[2], (J, nb, d)),
+             "y": jnp.zeros((J, nb, d))}
+    pool.step(batch)
+    # lane 1 (never attached) untouched bit-for-bit
+    np.testing.assert_array_equal(np.asarray(pool.params["w"][1]),
+                                  before_lane1["w"][1])
+    # active lanes match a dense run through the SAME compiled wrapper
+    dense_step = packing.packed_kernel_step(pool_step, donate=False)
+    dense_p, _, _ = dense_step(
+        {"w": jnp.asarray(before_lane1["w"])},
+        {"m": jnp.zeros((J,), jnp.float32)}, batch,
+        jnp.full((J,), 1e-2, jnp.float32), jnp.ones((J,), jnp.int32))
+    for lane in (0, 2):
+        np.testing.assert_array_equal(np.asarray(pool.params["w"][lane]),
+                                      np.asarray(dense_p["w"][lane]))
+    assert pool.n_traces == 1
+
+
+@given_cases(n=10, seed=11)
+def test_exec_modes_agree_random_lifecycle(rng):
+    """Property: a random attach/detach/step schedule gives bit-identical
+    per-task losses and final states in "where" and "compact" modes."""
+    init, opt, step = _setup()
+    cap = int(rng.integers(2, 5))
+    n_tasks = int(rng.integers(cap, 2 * cap + 1))
+    steps = [int(rng.integers(1, 5)) for _ in range(n_tasks)]
+    mk = lambda: [_lane_task(init, opt, i, steps=steps[i])
+                  for i in range(n_tasks)]
+    a, _, _ = _run_collect(mk(), _pool_mode(step, init, opt, cap, "where"))
+    b, _, _ = _run_collect(mk(), _pool_mode(step, init, opt, cap, "compact"))
+    assert set(a) == set(b)
+    for tid in a:
+        np.testing.assert_array_equal(np.float32(a[tid]),
+                                      np.float32(b[tid]))
+
+
+# ---------------------------------------------------------------------------
 # per-gang lane-occupancy gauge
 # ---------------------------------------------------------------------------
 
