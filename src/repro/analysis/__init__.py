@@ -1,0 +1,28 @@
+"""Repo-native static analysis (DESIGN.md §13).
+
+The replay/quality trajectory (BENCH_HISTORY.json, the scheduler-quality
+CI gate) is only trustworthy while scheduling decisions stay a pure
+function of recorded inputs, donated buffers are never read back, and
+every masked entrypoint honors the lane-mask contract. Those invariants
+are cross-layer and easy to break silently; this package checks them
+per-PR with AST rules instead of hoping a runtime test hits the bad path.
+
+Entry point: ``python -m repro.analysis.lint`` (``--check`` is the CI
+gate). Rule families: DET (determinism on the decision path), JAX
+(donation / retrace hazards), MASK (lane-mask contract), ACC (monitor
+counter symmetry). See DESIGN.md §13 for the catalog and the
+suppression / baseline workflow.
+"""
+from repro.analysis.config import LintConfig, default_config
+from repro.analysis.core import Finding, SourceModule, run_rules
+from repro.analysis.driver import LintResult, run_lint
+
+__all__ = [
+    "Finding",
+    "LintConfig",
+    "LintResult",
+    "SourceModule",
+    "default_config",
+    "run_lint",
+    "run_rules",
+]

@@ -1,0 +1,116 @@
+"""Lint configuration: which files are decision-path, which callables
+donate, which kernels owe the lane-mask contract.
+
+This is the one place a contributor registers new surface area:
+
+  * a new module whose outputs feed scheduling decisions goes into
+    ``decision_modules`` (the DET family then bans wall-clock reads,
+    unseeded RNG, set-order dependence, id() ordering and float ``==``
+    gates in it);
+  * a new donating step factory goes into ``donating_factories``;
+  * a new packed/lane-batched kernel entrypoint goes into
+    ``mask_entrypoints`` (MASK then enforces ``active=None`` + the
+    passthrough branch);
+  * a new paired monitor counter goes into ``acc_pairs``.
+
+See DESIGN.md §13 and docs/SHARING_MODES.md ("adding a decision-path
+module").
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Mapping, Sequence, Tuple
+
+#: Modules whose control flow decides *what runs where, when* — replays
+#: are only bit-identical while these stay pure functions of recorded
+#: inputs (DESIGN.md §6 invariants, §11 quality gate).
+DECISION_MODULES = (
+    "src/repro/core/simulate.py",
+    "src/repro/core/tenancy.py",
+    "src/repro/core/traces.py",
+    "src/repro/core/spatial.py",
+    "src/repro/core/triples.py",
+    "src/repro/core/scheduler.py",
+    "src/repro/core/monitor.py",
+)
+
+#: core/packing.py factories whose returned callable donates argument
+#: positions (params, opt_state) — reading a local after passing it to
+#: one of these is a use-after-free on device buffers (§7).
+DONATING_FACTORIES: Mapping[str, Tuple[int, ...]] = {
+    "packed_step": (0, 1),
+    "packed_masked_step": (0, 1),
+    "packed_compact_step": (0, 1),
+    "packed_kernel_step": (0, 1),
+    "masked_pool_step": (0, 1),
+}
+
+#: Packed / lane-batched kernel entrypoints owing the lane-mask
+#: contract: accept ``active=`` defaulting to None, with an explicit
+#: None passthrough (PR 7 contract; DESIGN.md §12).
+MASK_ENTRYPOINTS: Mapping[str, Tuple[str, ...]] = {
+    "src/repro/kernels/ops.py": (
+        "packed_matmul", "packed_norm", "flash_attention", "ssd"),
+    "src/repro/kernels/packed_gemm.py": ("packed_gemm",),
+    "src/repro/kernels/fused_rmsnorm.py": ("packed_rmsnorm",),
+}
+
+#: The masked-execution dispatcher must branch on every registered mode
+#: (a mode in MASKED_MODES with no dispatcher arm is dead config).
+MASK_DISPATCH = {
+    "module": "src/repro/core/packing.py",
+    "modes_const": "MASKED_MODES",
+    "dispatcher": "masked_pool_step",
+    "param": "mode",
+}
+
+#: Monitor counters that must be incremented in matched pairs at the
+#: call-site layer — an unpaired member means gauges drift monotonic
+#: and the LLload table lies (DESIGN.md §4).
+ACC_PAIRS = (
+    ("on_dispatch", "on_release"),
+    ("on_preempt", "on_resume"),
+    ("on_slice_alloc", "on_slice_release"),
+)
+
+#: Modules whose call sites the ACC family audits.
+ACC_MODULES = (
+    "src/repro/core/scheduler.py",
+    "src/repro/core/simulate.py",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    root: str
+    paths: Tuple[str, ...] = ("src/repro",)
+    decision_modules: Tuple[str, ...] = DECISION_MODULES
+    donating_factories: Mapping[str, Tuple[int, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DONATING_FACTORIES))
+    mask_entrypoints: Mapping[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(MASK_ENTRYPOINTS))
+    mask_dispatch: Dict = dataclasses.field(
+        default_factory=lambda: dict(MASK_DISPATCH))
+    acc_pairs: Tuple[Tuple[str, str], ...] = ACC_PAIRS
+    acc_modules: Tuple[str, ...] = ACC_MODULES
+    baseline_path: str = "LINT_BASELINE.json"
+
+    def is_decision(self, relpath: str) -> bool:
+        return relpath in self.decision_modules
+
+    def abs_baseline(self) -> str:
+        if os.path.isabs(self.baseline_path):
+            return self.baseline_path
+        return os.path.join(self.root, self.baseline_path)
+
+
+def repo_root() -> str:
+    """The checkout root, derived from this file's location
+    (src/repro/analysis/config.py -> three levels up)."""
+    here = os.path.abspath(os.path.dirname(__file__))
+    return os.path.abspath(os.path.join(here, "..", "..", ".."))
+
+
+def default_config(root: str | None = None, **overrides) -> LintConfig:
+    return LintConfig(root=root or repo_root(), **overrides)

@@ -1,0 +1,401 @@
+"""JAX — donation and retrace rules.
+
+  JAX101  use-after-donate: a local passed at a donated position of a
+          donating callable (jax.jit(..., donate_argnums=...) or a
+          core/packing.py step factory) is a dead device buffer; reading
+          it afterwards is a use-after-free that XLA may or may not
+          catch depending on backend.
+  JAX102  jax.jit (or a donating step factory) constructed inside a
+          loop body retraces per iteration — this is exactly the
+          compile-once invariant (DESIGN.md §7) the lane pool's trace
+          counter asserts at run time, checked statically.
+  JAX103  Python `if`/`while` on a traced parameter of a jitted
+          function escapes the trace (ConcretizationTypeError at best,
+          silently-baked-in constant at worst).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import (Finding, SourceModule, context_of,
+                                 register, resolve_call_name)
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+_VMAP_NAMES = {"jax.vmap"}
+
+
+def _literal_positions(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Evaluate a donate_argnums literal (int or tuple of ints)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)):
+                return None
+            vals.append(el.value)
+        return tuple(vals)
+    if isinstance(node, ast.IfExp):
+        # `(0, 1) if donate else ()` — union both arms, conservatively
+        a = _literal_positions(node.body) or ()
+        b = _literal_positions(node.orelse) or ()
+        return tuple(sorted(set(a) | set(b)))
+    return None
+
+
+def _donating_call(mod: SourceModule, node: ast.Call, config
+                   ) -> Optional[Tuple[int, ...]]:
+    """If ``node`` constructs a donating callable, return its donated
+    argument positions."""
+    name = resolve_call_name(mod, node.func)
+    if name is None:
+        return None
+    base = name.rsplit(".", 1)[-1]
+    if name in _JIT_NAMES:
+        for kw in node.keywords:
+            if kw.arg == "donate_argnums":
+                return _literal_positions(kw.value)
+        return None   # jit without donation: not a donating callable
+    if base in config.donating_factories:
+        for kw in node.keywords:
+            if (kw.arg == "donate" and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is False):
+                return None
+        return tuple(config.donating_factories[base])
+    return None
+
+
+class _DonationScan:
+    """Linear, per-function scan: track which locals hold donating
+    callables, mark Names donated when passed at donated positions, and
+    flag any later Load of a still-donated name. Loop bodies get a
+    second pass so a donation late in the body is seen by reads at the
+    top of the next iteration."""
+
+    def __init__(self, mod: SourceModule, config, out: List[Finding]):
+        self.mod = mod
+        self.config = config
+        self.out = out
+        self.donating: Dict[str, Tuple[int, ...]] = {}
+        self.donated: Dict[str, int] = {}    # name -> line donated at
+        self.reported: Set[Tuple[int, str]] = set()
+
+    # -- statement walk ----------------------------------------------------
+    def run(self, fn: ast.FunctionDef):
+        self.scan_block(fn.body)
+
+    def scan_block(self, stmts: Sequence[ast.stmt]):
+        for stmt in stmts:
+            self.scan_stmt(stmt)
+
+    def scan_stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return   # nested scopes analyzed independently
+        if isinstance(stmt, ast.Assign):
+            self.scan_expr(stmt.value)
+            self.handle_binding(stmt.targets, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self.scan_expr(stmt.value)
+                self.handle_binding([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            self.scan_expr(stmt.value)
+            self.scan_expr(stmt.target)
+        elif isinstance(stmt, ast.For):
+            self.scan_expr(stmt.iter)
+            self.kill_targets(stmt.target)
+            for _ in range(2):           # second pass: wrap-around reads
+                self.scan_block(stmt.body)
+            self.scan_block(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                self.scan_expr(stmt.test)
+                self.scan_block(stmt.body)
+            self.scan_block(stmt.orelse)
+        elif isinstance(stmt, ast.If):
+            self.scan_expr(stmt.test)
+            # branches are alternatives; merge donated state from both
+            snap = dict(self.donated)
+            self.scan_block(stmt.body)
+            after_body = self.donated
+            self.donated = snap
+            self.scan_block(stmt.orelse)
+            self.donated.update(after_body)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.scan_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self.kill_targets(item.optional_vars)
+            self.scan_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.scan_block(stmt.body)
+            for h in stmt.handlers:
+                self.scan_block(h.body)
+            self.scan_block(stmt.orelse)
+            self.scan_block(stmt.finalbody)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    self.donated.pop(t.id, None)
+        elif isinstance(stmt, (ast.Return, ast.Expr, ast.Assert,
+                               ast.Raise)):
+            for field in ast.iter_child_nodes(stmt):
+                self.scan_expr(field)
+        else:
+            for field in ast.iter_child_nodes(stmt):
+                if isinstance(field, ast.expr):
+                    self.scan_expr(field)
+
+    def handle_binding(self, targets, value):
+        # does the RHS construct a donating callable?
+        positions = None
+        if isinstance(value, ast.Call):
+            positions = _donating_call(self.mod, value, self.config)
+        for t in targets:
+            self.kill_targets(t)
+            if positions is not None and isinstance(t, ast.Name):
+                self.donating[t.id] = positions
+
+    def kill_targets(self, target):
+        for node in ast.walk(target):
+            if isinstance(node, ast.Name):
+                self.donated.pop(node.id, None)
+
+    # -- expressions -------------------------------------------------------
+    def scan_expr(self, node):
+        if node is None or not isinstance(node, ast.AST):
+            return
+        if isinstance(node, ast.Call):
+            self.scan_call(node)
+            return
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            self.check_read(node)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        for child in ast.iter_child_nodes(node):
+            self.scan_expr(child)
+
+    def scan_call(self, node: ast.Call):
+        self.scan_expr(node.func)
+        donated_positions: Tuple[int, ...] = ()
+        if isinstance(node.func, ast.Name):
+            donated_positions = self.donating.get(node.func.id, ())
+        else:
+            # immediate call of a factory result:
+            # packed_step(f)(params, opt) donates too
+            if isinstance(node.func, ast.Call):
+                pos = _donating_call(self.mod, node.func, self.config)
+                if pos:
+                    donated_positions = pos
+        for i, arg in enumerate(node.args):
+            self.scan_expr(arg)
+            if i in donated_positions and isinstance(arg, ast.Name):
+                self.donated[arg.id] = node.lineno
+        for kw in node.keywords:
+            self.scan_expr(kw.value)
+
+    def check_read(self, node: ast.Name):
+        line0 = self.donated.get(node.id)
+        if line0 is None:
+            return
+        key = (node.lineno, node.id)
+        if key in self.reported:
+            return
+        self.reported.add(key)
+        self.out.append(self.mod.finding(
+            "JAX101", "use-after-donate", node,
+            f"`{node.id}` was donated at line {line0} (donate_argnums "
+            f"buffer) — its device buffer is dead; rebind the result "
+            f"instead of reading the donated local",
+            context_of(self.mod, node)))
+
+
+@register("JAX101", "use-after-donate",
+          "no reads of locals after passing them at donated positions")
+def check_use_after_donate(modules, config) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.FunctionDef):
+                _DonationScan(mod, config, out).run(node)
+    return out
+
+
+@register("JAX102", "jit-in-loop",
+          "no jax.jit / donating step factory constructed in a loop body")
+def check_jit_in_loop(modules, config) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in modules:
+        _scan_jit_loops(mod, config, mod.tree, 0, out)
+    return out
+
+
+def _scan_jit_loops(mod, config, scope, loop_depth, out):
+    for node in ast.iter_child_nodes(scope):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # a def inside a loop resets the lexical hazard: the jit
+            # inside only runs when the def is called
+            _scan_jit_loops(mod, config, node, 0, out)
+            continue
+        depth = loop_depth
+        if isinstance(node, (ast.For, ast.While)):
+            depth += 1
+        if isinstance(node, ast.Call) and loop_depth > 0:
+            name = resolve_call_name(mod, node.func)
+            base = (name or "").rsplit(".", 1)[-1]
+            if name in _JIT_NAMES or base in config.donating_factories:
+                out.append(mod.finding(
+                    "JAX102", "jit-in-loop", node,
+                    f"{name or base}(...) constructed inside a loop "
+                    f"body retraces/recompiles every iteration — hoist "
+                    f"it out or cache per static shape (the §7 "
+                    f"compile-once invariant, statically)",
+                    context_of(mod, node)))
+        _scan_jit_loops(mod, config, node, depth, out)
+
+
+# -- JAX103: Python control flow on traced parameters ------------------------
+
+_STATIC_SAFE_CALLS = {"len", "isinstance", "hasattr", "getattr", "type"}
+
+
+def _collect_jitted_defs(mod: SourceModule
+                         ) -> List[Tuple[ast.FunctionDef, Set[str]]]:
+    """Find local function defs that are jitted, with their traced
+    parameter names (static_argnums honored when literal)."""
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs[node.name] = node
+
+    jitted: List[Tuple[ast.FunctionDef, Set[str]]] = []
+
+    def traced_params(fn: ast.FunctionDef, static: Tuple[int, ...]
+                      ) -> Set[str]:
+        names = []
+        for a in fn.args.posonlyargs + fn.args.args:
+            names.append(a.arg)
+        traced = {n for i, n in enumerate(names)
+                  if i not in static and n != "self"}
+        traced.update(a.arg for a in fn.args.kwonlyargs)
+        return traced
+
+    def target_def(node: ast.AST) -> Optional[ast.FunctionDef]:
+        if isinstance(node, ast.Name):
+            return defs.get(node.id)
+        if isinstance(node, ast.Call):   # jax.jit(jax.vmap(f))
+            name = resolve_call_name(mod, node.func)
+            if name in _VMAP_NAMES and node.args:
+                return target_def(node.args[0])
+        return None
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            name = resolve_call_name(mod, node.func)
+            if name not in _JIT_NAMES or not node.args:
+                continue
+            fn = target_def(node.args[0])
+            if fn is None:
+                continue
+            static: Tuple[int, ...] = ()
+            for kw in node.keywords:
+                if kw.arg == "static_argnums":
+                    static = _literal_positions(kw.value) or ()
+            jitted.append((fn, traced_params(fn, static)))
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                dname = resolve_call_name(
+                    mod, dec.func if isinstance(dec, ast.Call) else dec)
+                if dname in _JIT_NAMES:
+                    static = ()
+                    if isinstance(dec, ast.Call):
+                        for kw in dec.keywords:
+                            if kw.arg == "static_argnums":
+                                static = _literal_positions(kw.value) or ()
+                    jitted.append((node, traced_params(node, static)))
+                elif dname in ("functools.partial",) and isinstance(
+                        dec, ast.Call) and dec.args:
+                    inner = resolve_call_name(mod, dec.args[0])
+                    if inner in _JIT_NAMES:
+                        static = ()
+                        for kw in dec.keywords:
+                            if kw.arg == "static_argnums":
+                                static = _literal_positions(kw.value) or ()
+                        jitted.append((node, traced_params(node, static)))
+    return jitted
+
+
+def _traced_reads_in_test(test: ast.expr, traced: Set[str]) -> List[ast.Name]:
+    """Names of traced params whose VALUE the test observes. Excluded:
+    `x is None` checks, attribute access (x.shape and friends are
+    trace-safe), and static-safe builtin calls (len(x), isinstance)."""
+    excluded: Set[int] = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare):
+            ops_ok = all(isinstance(op, (ast.Is, ast.IsNot))
+                         for op in node.ops)
+            comps_none = all(isinstance(c, ast.Constant)
+                             and c.value is None
+                             for c in node.comparators)
+            if ops_ok and comps_none:
+                for sub in ast.walk(node.left):
+                    excluded.add(id(sub))
+        elif isinstance(node, ast.Attribute):
+            for sub in ast.walk(node.value):
+                excluded.add(id(sub))
+        elif isinstance(node, ast.Call):
+            fname = node.func.id if isinstance(node.func, ast.Name) else None
+            if fname in _STATIC_SAFE_CALLS:
+                for arg in node.args:
+                    for sub in ast.walk(arg):
+                        excluded.add(id(sub))
+    hits = []
+    for node in ast.walk(test):
+        if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                and node.id in traced and id(node) not in excluded):
+            hits.append(node)
+    return hits
+
+
+@register("JAX103", "traced-python-branch",
+          "no Python if/while on traced parameters of jitted functions")
+def check_traced_branch(modules, config) -> List[Finding]:
+    out: List[Finding] = []
+    seen: Set[Tuple[str, int]] = set()
+    for mod in modules:
+        for fn, traced in _collect_jitted_defs(mod):
+            for node in _walk_fn(fn):
+                if isinstance(node, (ast.If, ast.While)):
+                    for read in _traced_reads_in_test(node.test, traced):
+                        key = (mod.relpath, node.lineno)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        out.append(mod.finding(
+                            "JAX103", "traced-python-branch", node,
+                            f"Python {'while' if isinstance(node, ast.While) else 'if'} "
+                            f"on traced parameter `{read.id}` of jitted "
+                            f"`{fn.name}` — use jnp.where / lax.cond / "
+                            f"lax.while_loop, or mark the arg static",
+                            context_of(mod, node)))
+                        break
+    return out
+
+
+def _walk_fn(fn: ast.FunctionDef):
+    """Walk a function body without descending into nested defs (their
+    params shadow; they are only traced if themselves jitted)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))

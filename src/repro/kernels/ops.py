@@ -5,14 +5,19 @@
 backward is recompute through the memory-efficient jnp path, so the kernels
 are usable inside train_step.
 
-Lane masking: ``packed_matmul``/``packed_norm`` accept a per-lane
-``active`` predicate. On the Pallas path the mask is fused into the
-kernel (inactive grid tiles skip the MXU/VPU work — packed_gemm /
-packed_rmsnorm masked variants); on the XLA fallback it is a post-hoc
-where-zero, semantically identical but not cheaper. These are the
-building blocks of the pool's three masked-execution modes — "where",
-"compact" and "kernel" — dispatched by core.packing.masked_pool_step
-(see DESIGN.md §12 for when each wins).
+Lane masking: every packed/lane-batched entrypoint here —
+``packed_matmul``, ``packed_norm``, ``flash_attention``, ``ssd`` —
+accepts a per-lane ``active`` predicate with an ``active=None``
+zero-overhead fast path (the contract MASK201 in repro.analysis
+enforces). For packed_matmul/packed_norm on the Pallas path the mask is
+fused into the kernel (inactive grid tiles skip the MXU/VPU work —
+packed_gemm / packed_rmsnorm masked variants); for flash_attention/ssd
+(and every XLA fallback) it is a post-hoc where-zero, semantically
+identical but not cheaper — in-kernel ``pl.when`` gating for those two
+is ROADMAP item 3 follow-up. These are the building blocks of the
+pool's three masked-execution modes — "where", "compact" and "kernel"
+— dispatched by core.packing.masked_pool_step (see DESIGN.md §12 for
+when each wins).
 """
 from __future__ import annotations
 
@@ -32,8 +37,8 @@ def _use_pallas(interpret: bool) -> bool:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    interpret: bool = False):
+def _flash_attention_core(q, k, v, causal: bool = True, window: int = 0,
+                          interpret: bool = False):
     if _use_pallas(interpret):
         from repro.kernels.flash_attention import flash_attention_fwd
         return flash_attention_fwd(q, k, v, causal=causal, window=window,
@@ -43,7 +48,7 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
 
 
 def _fa_fwd(q, k, v, causal, window, interpret):
-    return flash_attention(q, k, v, causal, window, interpret), (q, k, v)
+    return _flash_attention_core(q, k, v, causal, window, interpret), (q, k, v)
 
 
 def _fa_bwd(causal, window, interpret, res, g):
@@ -55,20 +60,59 @@ def _fa_bwd(causal, window, interpret, res, g):
     return vjp(g)
 
 
-flash_attention.defvjp(_fa_fwd, _fa_bwd)
+_flash_attention_core.defvjp(_fa_fwd, _fa_bwd)
+
+
+def _mask_lanes(active, *arrays):
+    """where-zero an ``active`` (J,)-predicated lane axis onto every
+    array's leading dim — inactive lanes become exact zeros, active
+    lanes pass through bit-identically. The post-hoc mask is
+    semantically identical to in-kernel gating, just not cheaper; the
+    Pallas-native ``pl.when`` variant for these kernels is ROADMAP
+    item 3 follow-up work."""
+    mask = jnp.asarray(active) != 0
+    outs = tuple(
+        jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)), a,
+                  jnp.zeros((), a.dtype))
+        for a in arrays)
+    return outs[0] if len(outs) == 1 else outs
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = False, *, active=None):
+    """Flash attention with the lane-mask contract of DESIGN.md §12:
+    ``active`` (bool/int (B,), optional) treats the batch dim as lane
+    axis — inactive lanes' outputs are exact zeros, active lanes are
+    bit-identical to the unmasked call; ``active=None`` is the
+    zero-overhead fast path (the program is byte-unchanged)."""
+    out = _flash_attention_core(q, k, v, causal, window, interpret)
+    if active is None:
+        return out
+    return _mask_lanes(active, out)
 
 
 # ---------------------------------------------------------------------------
 # SSD scan
 # ---------------------------------------------------------------------------
 
-def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
-    """Dispatch to kernel on TPU / interpret, else chunked jnp."""
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False,
+        active=None):
+    """Dispatch to kernel on TPU / interpret, else chunked jnp.
+
+    ``active`` (bool/int (b,), optional): per-lane predicate over the
+    batch dim — inactive lanes' y AND final state are exact zeros
+    (where-zero applied to both outputs), active lanes bit-identical;
+    ``active=None`` leaves the program untouched."""
     if _use_pallas(interpret):
         from repro.kernels.ssd_scan import ssd_scan
-        return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
-    from repro.models.ssm import ssd_chunked
-    return ssd_chunked(x, dt, A, B, C, chunk=chunk)
+        y, state = ssd_scan(x, dt, A, B, C, chunk=chunk,
+                            interpret=interpret)
+    else:
+        from repro.models.ssm import ssd_chunked
+        y, state = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    if active is None:
+        return y, state
+    return _mask_lanes(active, y, state)
 
 
 # ---------------------------------------------------------------------------

@@ -128,7 +128,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         print(f"[dryrun] SKIP {label} (documented: this cell needs "
               f"sub-quadratic attention or a decoder arch)")
         return None
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         with mesh:
             lowered, n_tokens, kind, model = lower_cell(
@@ -157,7 +157,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             "roofline_fraction_kernel": rep.roofline_fraction_kernel,
         })
         row.update({
-            "compile_s": time.time() - t0,
+            "compile_s": time.perf_counter() - t0,
             "arg_gb_dev": ma.argument_size_in_bytes / 1e9,
             "temp_gb_dev": ma.temp_size_in_bytes / 1e9,
             "alias_gb_dev": ma.alias_size_in_bytes / 1e9,

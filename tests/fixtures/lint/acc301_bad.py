@@ -1,0 +1,8 @@
+"""Fixture: unpaired monitor counters at the call-site layer."""
+
+
+def dispatch_loop(gauges, jobs):
+    for job in jobs:
+        gauges.on_dispatch(job)            # ACC301: no on_release anywhere
+        if job.preemptible:
+            gauges.on_preempt(job)         # ACC301: no on_resume anywhere

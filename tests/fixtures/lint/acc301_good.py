@@ -1,0 +1,10 @@
+"""Fixture: monitor counters incremented in matched pairs."""
+
+
+def dispatch_loop(gauges, jobs):
+    for job in jobs:
+        gauges.on_dispatch(job)
+        if job.preemptible:
+            gauges.on_preempt(job)
+            gauges.on_resume(job)
+        gauges.on_release(job)

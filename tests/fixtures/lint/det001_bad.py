@@ -1,0 +1,10 @@
+"""Fixture: clock reads on the decision path (DET001). Parsed, never run."""
+import time
+from datetime import datetime
+
+
+def pick_victim(jobs):
+    now = time.time()                      # DET001
+    tick = time.perf_counter()             # DET001
+    stamp = datetime.now()                 # DET001
+    return [j for j in jobs if j.submit < now], tick, stamp

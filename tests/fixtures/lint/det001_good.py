@@ -1,0 +1,6 @@
+"""Fixture: decision path clean of clock reads (DET001 good twin)."""
+
+
+def pick_victim(jobs, now):
+    # the clock value arrives as a recorded input, not a host read
+    return [j for j in jobs if j.submit < now]

@@ -1,0 +1,8 @@
+"""Fixture: wall clock used as a duration clock (DET002). Parsed, never run."""
+import time
+
+
+def timed(fn):
+    t0 = time.time()                       # DET002
+    fn()
+    return time.time() - t0                # DET002

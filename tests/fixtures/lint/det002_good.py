@@ -1,0 +1,8 @@
+"""Fixture: perf_counter is the sanctioned duration clock (DET002 good)."""
+import time
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

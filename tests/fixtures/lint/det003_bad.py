@@ -1,0 +1,11 @@
+"""Fixture: unseeded RNG on the decision path (DET003). Parsed, never run."""
+import random
+
+import numpy as np
+
+
+def jitter(order):
+    random.shuffle(order)                  # DET003: stdlib global RNG
+    noise = np.random.rand(len(order))     # DET003: legacy global RNG
+    rng = np.random.default_rng()          # DET003: OS-entropy seed
+    return order, noise, rng

@@ -1,0 +1,8 @@
+"""Fixture: explicitly seeded generators are fine (DET003 good twin)."""
+import numpy as np
+
+
+def jitter(order, seed):
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    idx = rng.permutation(len(order))
+    return [order[i] for i in idx]

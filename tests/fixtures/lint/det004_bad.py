@@ -1,0 +1,10 @@
+"""Fixture: set iteration feeding order-sensitive consumers (DET004)."""
+
+
+def place(jobs):
+    pending = {j for j in jobs}
+    order = list(pending)                  # DET004: list() of a set
+    for j in pending:                      # DET004: for over a set
+        order.append(j)
+    firsts = [j for j in pending | {0}]    # DET004: comprehension over set
+    return order, firsts

@@ -1,0 +1,10 @@
+"""Fixture: sorted / order-insensitive set consumption (DET004 good)."""
+
+
+def place(jobs):
+    pending = {j for j in jobs}
+    order = sorted(pending)                # sorted: deterministic
+    best = min(pending)                    # reduction: order-insensitive
+    n = len(pending)
+    present = 3 in pending                 # membership: fine
+    return order, best, n, present

@@ -1,0 +1,5 @@
+"""Fixture: id()-derived ordering (DET005). Parsed, never run."""
+
+
+def stable_order(gangs):
+    return sorted(gangs, key=lambda g: id(g))   # DET005

@@ -1,0 +1,5 @@
+"""Fixture: ordering on a stable field (DET005 good twin)."""
+
+
+def stable_order(gangs):
+    return sorted(gangs, key=lambda g: g.submit_seq)

@@ -1,0 +1,7 @@
+"""Fixture: float equality in a scheduling gate (DET006)."""
+
+
+def should_repack(occupancy):
+    if occupancy == 0.5:                   # DET006
+        return True
+    return occupancy != 1.0                # DET006

@@ -1,0 +1,7 @@
+"""Fixture: tolerance / ordering comparisons in gates (DET006 good)."""
+
+
+def should_repack(occupancy, n_active):
+    if abs(occupancy - 0.5) < 1e-9:
+        return True
+    return n_active == 0                   # integer gate: exact by design

@@ -1,0 +1,18 @@
+"""Fixture: use-after-donate (JAX101). Parsed, never run."""
+import jax
+
+from repro.core.packing import packed_masked_step
+
+
+def run(step_fn, params, opt_state, batch, hparams, mask):
+    fn = packed_masked_step(step_fn)
+    new_p, new_o, metrics = fn(params, opt_state, batch, hparams, mask)
+    stale = params                         # JAX101: donated buffer read
+    return new_p, new_o, metrics, stale
+
+
+def run_jit(step, params, opt, batch):
+    fn = jax.jit(step, donate_argnums=(0, 1))
+    out = fn(params, opt, batch)
+    opt_norm = sum(opt)                    # JAX101: donated buffer read
+    return out, opt_norm

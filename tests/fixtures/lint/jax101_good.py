@@ -1,0 +1,25 @@
+"""Fixture: donation with rebinding — the sanctioned shape (JAX101 good)."""
+import jax
+
+from repro.core.packing import packed_masked_step
+
+
+def run(step_fn, params, opt_state, batch, hparams, mask):
+    fn = packed_masked_step(step_fn)
+    for _ in range(3):
+        # donated locals are rebound from the result every call
+        params, opt_state, metrics = fn(params, opt_state, batch,
+                                        hparams, mask)
+    return params, opt_state, metrics
+
+
+def run_nodonate(step_fn, params, opt_state, batch, hparams, mask):
+    fn = packed_masked_step(step_fn, donate=False)
+    new_p, new_o, metrics = fn(params, opt_state, batch, hparams, mask)
+    return new_p, new_o, metrics, params   # fine: donation disabled
+
+
+def run_jit(step, params, opt, batch):
+    fn = jax.jit(step)
+    out = fn(params, opt, batch)
+    return out, params                     # fine: jit without donation

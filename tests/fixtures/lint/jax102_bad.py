@@ -1,0 +1,15 @@
+"""Fixture: jit constructed inside a loop body (JAX102)."""
+import jax
+
+from repro.core.packing import packed_step
+
+
+def sweep(step, tasks):
+    outs = []
+    for t in tasks:
+        fn = jax.jit(step)                 # JAX102: retrace per iteration
+        outs.append(fn(t))
+    while tasks:
+        g = packed_step(step)              # JAX102: factory in loop
+        outs.append(g(tasks.pop()))
+    return outs

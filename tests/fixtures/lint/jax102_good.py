@@ -1,0 +1,23 @@
+"""Fixture: jit hoisted out of the loop / cached per bucket (JAX102 good)."""
+import jax
+
+from repro.core.packing import packed_step
+
+
+def sweep(step, tasks):
+    fn = jax.jit(step)                     # compiled once
+    outs = [fn(t) for t in tasks]
+    return outs
+
+
+def bucketed(step, tasks):
+    compiled = {}
+
+    def get(bucket):
+        # def boundary resets the lexical loop hazard: this body runs
+        # once per DISTINCT bucket, guarded by the cache
+        if bucket not in compiled:
+            compiled[bucket] = packed_step(step)
+        return compiled[bucket]
+
+    return [get(len(t))(t) for t in tasks]

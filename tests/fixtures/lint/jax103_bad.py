@@ -1,0 +1,19 @@
+"""Fixture: Python control flow on traced parameters (JAX103)."""
+import jax
+
+
+def make_step(lr):
+    def step(params, grads, scale):
+        if scale > 1.0:                    # JAX103: traced branch
+            grads = [g / scale for g in grads]
+        while scale > 2.0:                 # JAX103: traced while
+            scale = scale / 2.0
+        return [p - lr * g for p, g in zip(params, grads)]
+    return jax.jit(step)
+
+
+@jax.jit
+def decorated(x, flag):
+    if flag:                               # JAX103: traced branch
+        return x * 2
+    return x

@@ -1,0 +1,29 @@
+"""Fixture: trace-safe control flow (JAX103 good twin)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_step(lr):
+    def step(params, grads, scale):
+        grads = [jnp.where(scale > 1.0, g / scale, g) for g in grads]
+        return [p - lr * g for p, g in zip(params, grads)]
+    return jax.jit(step)
+
+
+def make_masked(step_fn):
+    def step(params, batch, active):
+        if active is None:                 # None-check: Python-level, fine
+            return step_fn(params, batch)
+        if params.shape[0] > 4:            # shape: static under trace
+            batch = batch[:4]
+        return step_fn(params, batch)
+    return jax.jit(step)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def decorated(x, flag):
+    if flag:                               # static arg: Python branch fine
+        return x * 2
+    return x

@@ -1,0 +1,10 @@
+"""Fixture: packed entrypoints violating the lane-mask contract."""
+import jax.numpy as jnp
+
+
+def packed_relu(x):                        # MASK201: no active= at all
+    return jnp.maximum(x, 0.0)
+
+
+def packed_scale(x, factor, active=None):  # MASK201: takes it, ignores it
+    return x * factor

@@ -1,0 +1,16 @@
+"""Fixture: packed entrypoints honoring the lane-mask contract."""
+import jax.numpy as jnp
+
+
+def packed_relu(x, *, active=None):
+    out = jnp.maximum(x, 0.0)
+    if active is None:
+        return out
+    mask = jnp.asarray(active) != 0
+    return jnp.where(mask.reshape((-1,) + (1,) * (out.ndim - 1)),
+                     out, jnp.zeros((), out.dtype))
+
+
+def packed_scale(x, factor, active=None):
+    # passthrough form: forwards the mask to a masked callee
+    return packed_relu(x * factor, active=active)

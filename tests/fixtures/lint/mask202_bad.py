@@ -1,0 +1,12 @@
+"""Fixture: a registered masked mode with no dispatcher arm."""
+
+MASKED_MODES = ("where", "compact", "kernel")
+
+
+def masked_pool_step(step_fn, mode="where"):
+    if mode == "where":
+        return step_fn
+    if mode == "compact":
+        return step_fn
+    # MASK202: "kernel" is registered above but has no arm here
+    raise ValueError(mode)

@@ -1,0 +1,8 @@
+"""Fixture: malformed and unused pragmas (LNT001 / LNT002)."""
+import time
+
+
+def report():
+    stamp = time.time()  # lint: disable=DET002()
+    clean = 1 + 1  # lint: disable=DET002(nothing to suppress on this line)
+    return {"stamp": stamp, "clean": clean}

@@ -1,0 +1,7 @@
+"""Fixture: a real violation suppressed by a well-formed pragma."""
+import time
+
+
+def report():
+    stamp = time.time()  # lint: disable=DET002(fixture: human-readable log stamp, never a duration)
+    return {"stamp": stamp}

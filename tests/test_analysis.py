@@ -1,0 +1,326 @@
+"""Tests for the contract-lint suite (repro.analysis; DESIGN.md §13).
+
+Layout:
+  * per-rule good/bad fixture pairs under tests/fixtures/lint/ — every
+    bad fixture must trigger its rule (exact count), every good twin
+    must be completely clean;
+  * pragma machinery (suppression, LNT001 malformed, LNT002 unused,
+    pragmas inside docstrings ignored);
+  * baseline round-trip + the zero-drift property in both directions
+    (new finding fails, uncommitted shrink fails) and line-shift
+    stability of fingerprints;
+  * CLI exit codes on a synthetic tree, including the acceptance
+    seed (time.time() into a decision-path module);
+  * the meta-test: the repo-wide run is clean against the committed
+    (empty) baseline.
+"""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import baseline as bl
+from repro.analysis import lint as lint_cli
+from repro.analysis.config import LintConfig, default_config
+from repro.analysis.core import (SourceModule, all_rule_ids, parse_pragmas,
+                                 run_rules)
+from repro.analysis.driver import collect_files, run_lint
+
+FIXDIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "fixtures", "lint")
+
+DECISION_FIXTURES = (
+    "det001_bad.py", "det001_good.py",
+    "det003_bad.py", "det003_good.py",
+    "det004_bad.py", "det004_good.py",
+    "det005_bad.py", "det005_good.py",
+    "det006_bad.py", "det006_good.py",
+)
+
+
+def fixture_config(**overrides):
+    base = dict(
+        root=FIXDIR,
+        paths=(".",),
+        decision_modules=DECISION_FIXTURES,
+        mask_entrypoints={
+            "mask201_bad.py": ("packed_relu", "packed_scale"),
+            "mask201_good.py": ("packed_relu", "packed_scale"),
+        },
+        mask_dispatch={"module": "mask202_bad.py",
+                       "modes_const": "MASKED_MODES",
+                       "dispatcher": "masked_pool_step", "param": "mode"},
+        acc_modules=("acc301_bad.py", "acc301_good.py"),
+    )
+    base.update(overrides)
+    return LintConfig(**base)
+
+
+def run_fixture_rules(config=None):
+    config = config or fixture_config()
+    known = all_rule_ids()
+    modules = [SourceModule.load(p, config.root, known)
+               for p in collect_files(config)]
+    return run_rules(modules, config)
+
+
+@pytest.fixture(scope="module")
+def fixture_findings():
+    active, suppressed, pragmas = run_fixture_rules()
+    return active, suppressed
+
+
+def of(findings, rule=None, path=None):
+    return [f for f in findings
+            if (rule is None or f.rule == rule)
+            and (path is None or f.path == path)]
+
+
+# -------------------------------------------------------------------------
+# per-rule fixture pairs
+# -------------------------------------------------------------------------
+
+RULE_CASES = [
+    # (rule, bad fixture, expected findings, good twin)
+    ("DET001", "det001_bad.py", 3, "det001_good.py"),
+    ("DET002", "det002_bad.py", 2, "det002_good.py"),
+    ("DET003", "det003_bad.py", 3, "det003_good.py"),
+    ("DET004", "det004_bad.py", 3, "det004_good.py"),
+    ("DET005", "det005_bad.py", 1, "det005_good.py"),
+    ("DET006", "det006_bad.py", 2, "det006_good.py"),
+    ("JAX101", "jax101_bad.py", 2, "jax101_good.py"),
+    ("JAX102", "jax102_bad.py", 2, "jax102_good.py"),
+    ("JAX103", "jax103_bad.py", 3, "jax103_good.py"),
+    ("MASK201", "mask201_bad.py", 2, "mask201_good.py"),
+    ("MASK202", "mask202_bad.py", 1, "mask202_good.py"),
+    ("ACC301", "acc301_bad.py", 2, "acc301_good.py"),
+]
+
+
+@pytest.mark.parametrize("rule,bad,expected,good", RULE_CASES,
+                         ids=[c[0] for c in RULE_CASES])
+def test_rule_fixture_pair(fixture_findings, rule, bad, expected, good):
+    active, _ = fixture_findings
+    hits = of(active, rule=rule, path=bad)
+    assert len(hits) == expected, (
+        f"{rule} should fire {expected}x on {bad}, got "
+        f"{[f.render() for f in of(active, path=bad)]}")
+    # the bad fixture triggers ONLY its own rule (fixtures are rule-pure)
+    assert of(active, path=bad) == hits
+    # the good twin is completely clean
+    assert of(active, path=good) == [], (
+        f"good twin {good} must be clean, got "
+        f"{[f.render() for f in of(active, path=good)]}")
+
+
+def test_mask202_good_dispatcher_clean():
+    # MASK202 audits one dispatcher module per config; point it at the
+    # good twin and assert full mode coverage passes
+    cfg = fixture_config(mask_dispatch={
+        "module": "mask202_good.py", "modes_const": "MASKED_MODES",
+        "dispatcher": "masked_pool_step", "param": "mode"})
+    active, _, _ = run_fixture_rules(cfg)
+    assert of(active, rule="MASK202") == []
+
+
+def test_findings_render_rule_and_path(fixture_findings):
+    active, _ = fixture_findings
+    f = of(active, rule="DET001")[0]
+    rendered = f.render()
+    assert "DET001" in rendered and "det001_bad.py" in rendered
+    assert f.line > 0 and f.context != ""
+
+
+# -------------------------------------------------------------------------
+# pragmas
+# -------------------------------------------------------------------------
+
+def test_pragma_suppresses_with_reason(fixture_findings):
+    active, suppressed = fixture_findings
+    assert of(active, path="pragma_ok.py") == []
+    sup = of(suppressed, path="pragma_ok.py")
+    assert [f.rule for f in sup] == ["DET002"]
+
+
+def test_pragma_empty_reason_is_lnt001_and_does_not_suppress(
+        fixture_findings):
+    active, _ = fixture_findings
+    rules = sorted(f.rule for f in of(active, path="pragma_bad.py"))
+    # the malformed pragma is flagged AND the underlying violation stays
+    assert rules == ["DET002", "LNT001", "LNT002"]
+
+
+def test_pragma_unused_is_lnt002(fixture_findings):
+    active, _ = fixture_findings
+    lnt2 = of(active, rule="LNT002", path="pragma_bad.py")
+    assert len(lnt2) == 1
+    assert "DET002" in lnt2[0].message
+
+
+def test_parse_pragmas_entries_and_malformed():
+    src = textwrap.dedent("""\
+        x = 1  # lint: disable=DET001(reason one),DET002(reason two)
+        y = 2  # lint: disable=ZZZ999(whatever)
+        z = 3  # lint: disable=DET001
+        """)
+    pragmas, malformed = parse_pragmas(src, known_rules=all_rule_ids())
+    assert [(p.line, p.rule, p.reason) for p in pragmas] == [
+        (1, "DET001", "reason one"), (1, "DET002", "reason two")]
+    problems = {line: msg for line, msg in malformed}
+    assert "unknown rule ZZZ999" in problems[2]
+    assert "missing a (reason)" in problems[3]
+
+
+def test_pragma_inside_docstring_is_ignored():
+    src = '"""Example: # lint: disable=DET001(not a real pragma)"""\n'
+    pragmas, malformed = parse_pragmas(src, known_rules=all_rule_ids())
+    assert pragmas == [] and malformed == []
+
+
+# -------------------------------------------------------------------------
+# baseline round-trip + zero-drift
+# -------------------------------------------------------------------------
+
+def test_baseline_roundtrip(tmp_path, fixture_findings):
+    active, _ = fixture_findings
+    path = str(tmp_path / "bl.json")
+    bl.save_baseline(path, active)
+    loaded = bl.load_baseline(path)
+    assert loaded == bl.count_findings(active)
+    # identical findings diff clean against their own baseline
+    new, stale = bl.diff_baseline(active, loaded)
+    assert new == [] and stale == []
+
+
+def test_baseline_flags_new_and_stale(tmp_path, fixture_findings):
+    active, _ = fixture_findings
+    path = str(tmp_path / "bl.json")
+    bl.save_baseline(path, active[1:])         # one finding not tolerated
+    new, stale = bl.diff_baseline(active, bl.load_baseline(path))
+    assert [f.fingerprint for f in new] == [active[0].fingerprint]
+    # ...and the reverse: a fixed finding leaves a stale entry
+    bl.save_baseline(path, active)
+    new, stale = bl.diff_baseline(active[1:], bl.load_baseline(path))
+    assert new == [] and stale == [active[0].fingerprint]
+
+
+def test_baseline_version_check(tmp_path):
+    path = tmp_path / "bl.json"
+    path.write_text(json.dumps({"version": 999, "findings": {}}))
+    with pytest.raises(ValueError, match="version"):
+        bl.load_baseline(str(path))
+
+
+def test_fingerprint_survives_line_shift(tmp_path):
+    """The baseline keys on scope + normalized text, not line numbers:
+    edits above a tolerated finding must not count as drift."""
+    mod = tmp_path / "wall.py"
+    body = "import time\n\n\ndef took():\n    return time.time()\n"
+    mod.write_text(body)
+    cfg = LintConfig(root=str(tmp_path), paths=("wall.py",))
+    r1 = run_lint(cfg)
+    assert [f.rule for f in r1.active] == ["DET002"]
+    bl.save_baseline(cfg.abs_baseline(), r1.active)
+
+    mod.write_text("# a comment pushing everything down two lines\n\n"
+                   + body)
+    r2 = run_lint(cfg)
+    assert r2.active[0].line != r1.active[0].line
+    assert r2.ok, (r2.new, r2.stale)
+
+
+# -------------------------------------------------------------------------
+# CLI exit codes on a synthetic tree
+# -------------------------------------------------------------------------
+
+def _seed_tree(tmp_path, violation=True):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    clock = "time.time()" if violation else "time.perf_counter()"
+    (tmp_path / "src" / "repro" / "timing.py").write_text(
+        f"import time\n\n\ndef took(t0):\n    return {clock} - t0\n")
+    return tmp_path
+
+
+def test_cli_check_fails_on_violation_names_rule(tmp_path, capsys):
+    root = _seed_tree(tmp_path, violation=True)
+    rc = lint_cli.main(["--root", str(root), "--check"])
+    captured = capsys.readouterr().out
+    assert rc == 1
+    assert "DET002" in captured and "timing.py" in captured
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    root = _seed_tree(tmp_path, violation=False)
+    rc = lint_cli.main(["--root", str(root), "--check"])
+    assert rc == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_update_baseline_then_check_then_stale(tmp_path, capsys):
+    root = _seed_tree(tmp_path, violation=True)
+    assert lint_cli.main(["--root", str(root), "--update-baseline"]) == 0
+    # tolerated by the baseline now
+    assert lint_cli.main(["--root", str(root), "--check"]) == 0
+    # fixing the violation WITHOUT shrinking the baseline is drift too
+    _seed_tree_fix = root / "src" / "repro" / "timing.py"
+    _seed_tree_fix.write_text(
+        "import time\n\n\ndef took(t0):\n"
+        "    return time.perf_counter() - t0\n")
+    rc = lint_cli.main(["--root", str(root), "--check"])
+    assert rc == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_seeded_decision_module_violation(tmp_path, capsys):
+    """The ISSUE acceptance seed: time.time() appearing in a
+    decision-path module trips DET001 (not just DET002) by path."""
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "simulate.py").write_text(
+        "import time\n\n\ndef pick():\n    return time.time()\n")
+    rc = lint_cli.main(["--root", str(tmp_path), "--check"])
+    captured = capsys.readouterr().out
+    assert rc == 1
+    assert "DET001" in captured
+
+
+def test_cli_list_rules(capsys):
+    assert lint_cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("DET001", "DET006", "JAX101", "JAX103", "MASK201",
+                "MASK202", "ACC301"):
+        assert rid in out
+
+
+def test_cli_json_output(tmp_path, capsys):
+    root = _seed_tree(tmp_path, violation=True)
+    rc = lint_cli.main(["--root", str(root), "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["new"][0]["rule"] == "DET002"
+
+
+# -------------------------------------------------------------------------
+# meta: the repo itself is clean against the committed baseline
+# -------------------------------------------------------------------------
+
+def test_repo_wide_lint_is_clean():
+    result = run_lint(default_config())
+    assert result.active == [], (
+        "repo lint must be clean (fix or pragma with a reason):\n"
+        + "\n".join(f.render() for f in result.active))
+    assert result.ok
+    # the committed baseline is EMPTY: nothing is tolerated silently
+    assert bl.load_baseline(default_config().abs_baseline()) == {}
+
+
+def test_repo_config_names_real_files():
+    """Config rot check: every configured path exists so rules cannot
+    silently skip a renamed module."""
+    cfg = default_config()
+    for rel in (cfg.decision_modules + cfg.acc_modules
+                + tuple(cfg.mask_entrypoints)
+                + (cfg.mask_dispatch["module"],)):
+        assert os.path.exists(os.path.join(cfg.root, rel)), rel

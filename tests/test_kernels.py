@@ -227,3 +227,78 @@ def test_masked_ops_random_occupancy(rng):
             np.testing.assert_array_equal(
                 np.asarray(out[inact]),
                 np.zeros((inact.size, M, N), np.float32))
+
+
+@pytest.mark.parametrize("active", [(1, 0, 1, 0), (0, 0, 0, 1),
+                                    (1, 1, 1, 1)])
+def test_flash_attention_masked_lanes(active):
+    """ops.flash_attention honors the active= contract (MASK201): the
+    batch dim is the lane axis — active lanes bit-identical to the
+    unmasked call, inactive lanes exact zeros."""
+    B, S, H, D = 4, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    dense = ops.flash_attention(q, k, v, causal=True)
+    masked = ops.flash_attention(q, k, v, causal=True,
+                                 active=jnp.asarray(active))
+    for b, a in enumerate(active):
+        if a:
+            np.testing.assert_array_equal(np.asarray(masked[b]),
+                                          np.asarray(dense[b]))
+        else:
+            np.testing.assert_array_equal(np.asarray(masked[b]),
+                                          np.zeros((S, H, D), np.float32))
+
+
+def test_flash_attention_masked_grad_zero_on_inactive():
+    """The mask sits OUTSIDE the custom_vjp: gradients must still flow
+    (active lanes match the dense grad, inactive lanes get zero grad)."""
+    B, S, H, D = 4, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(29), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    active = jnp.asarray([1, 0, 1, 1])
+
+    g_masked = jax.grad(
+        lambda q_: ops.flash_attention(q_, k, v, causal=True,
+                                       active=active).sum())(q)
+    g_dense = jax.grad(
+        lambda q_: ops.flash_attention(q_, k, v, causal=True).sum())(q)
+    for b in range(B):
+        if int(active[b]):
+            np.testing.assert_allclose(np.asarray(g_masked[b]),
+                                       np.asarray(g_dense[b]),
+                                       rtol=1e-6, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(g_masked[b]),
+                                          np.zeros((S, H, D), np.float32))
+
+
+@pytest.mark.parametrize("active", [(1, 0, 1, 0), (0, 1, 0, 0)])
+def test_ssd_masked_lanes_y_and_state(active):
+    """ops.ssd masks BOTH outputs: y and the final state are zero on
+    inactive lanes and bit-identical on active ones."""
+    b, S, nh, hd, N = 4, 64, 2, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(31), 5)
+    x = jax.random.normal(ks[0], (b, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[3], (b, S, N))
+    C = jax.random.normal(ks[4], (b, S, N))
+    y_d, st_d = ops.ssd(x, dt, A, Bm, C, chunk=32)
+    y_m, st_m = ops.ssd(x, dt, A, Bm, C, chunk=32,
+                        active=jnp.asarray(active))
+    for j, a in enumerate(active):
+        if a:
+            np.testing.assert_array_equal(np.asarray(y_m[j]),
+                                          np.asarray(y_d[j]))
+            np.testing.assert_array_equal(np.asarray(st_m[j]),
+                                          np.asarray(st_d[j]))
+        else:
+            np.testing.assert_array_equal(np.asarray(y_m[j]),
+                                          np.zeros_like(np.asarray(y_d[j])))
+            np.testing.assert_array_equal(np.asarray(st_m[j]),
+                                          np.zeros_like(np.asarray(st_d[j])))
