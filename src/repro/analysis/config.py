@@ -54,6 +54,7 @@ MASK_ENTRYPOINTS: Mapping[str, Tuple[str, ...]] = {
         "packed_matmul", "packed_norm", "flash_attention", "ssd"),
     "src/repro/kernels/packed_gemm.py": ("packed_gemm",),
     "src/repro/kernels/fused_rmsnorm.py": ("packed_rmsnorm",),
+    "src/repro/kernels/flash_attention.py": ("flash_attention_fwd",),
 }
 
 #: The masked-execution dispatcher must branch on every registered mode
@@ -80,6 +81,18 @@ ACC_MODULES = (
     "src/repro/core/simulate.py",
 )
 
+#: pallas_call-backed kernel entry functions that owe the *native* lane
+#: mask: the kernel itself must gate its compute behind ``pl.when`` on
+#: an SMEM lane predicate (PAL403). This is one level below
+#: MASK_ENTRYPOINTS — an entrypoint can satisfy MASK201 with a where-
+#: zero fallback, but a kernel registered here must not.
+MASKED_KERNELS: Mapping[str, Tuple[str, ...]] = {
+    "src/repro/kernels/packed_gemm.py": ("packed_gemm",),
+    "src/repro/kernels/fused_rmsnorm.py": ("packed_rmsnorm",),
+    "src/repro/kernels/flash_attention.py": ("flash_attention_fwd",),
+    "src/repro/kernels/ssd_scan.py": ("ssd_scan",),
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class LintConfig:
@@ -94,6 +107,13 @@ class LintConfig:
         default_factory=lambda: dict(MASK_DISPATCH))
     acc_pairs: Tuple[Tuple[str, str], ...] = ACC_PAIRS
     acc_modules: Tuple[str, ...] = ACC_MODULES
+    masked_kernels: Mapping[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(MASKED_KERNELS))
+    tile_budgets: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: dict(_tile_budgets()))
+    tile_nominal_dims: Mapping[str, int] = dataclasses.field(
+        default_factory=lambda: dict(_nominal_dims()))
+    tile_tolerance: float = 0.25
     baseline_path: str = "LINT_BASELINE.json"
 
     def is_decision(self, relpath: str) -> bool:
@@ -103,6 +123,19 @@ class LintConfig:
         if os.path.isabs(self.baseline_path):
             return self.baseline_path
         return os.path.join(self.root, self.baseline_path)
+
+
+def _tile_budgets() -> Mapping[str, float]:
+    """PAL406 budgets live next to the measured roofline numbers so a
+    kernel change updates both in one review (hlo_costs is stdlib-only,
+    so the lint stays dep-free)."""
+    from repro.roofline.hlo_costs import PALLAS_TILE_BUDGETS
+    return PALLAS_TILE_BUDGETS
+
+
+def _nominal_dims() -> Mapping[str, int]:
+    from repro.roofline.hlo_costs import PALLAS_NOMINAL_DIMS
+    return PALLAS_NOMINAL_DIMS
 
 
 def repo_root() -> str:

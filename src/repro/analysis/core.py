@@ -279,6 +279,7 @@ def _ensure_rules_loaded():
     from repro.analysis import rules_det    # noqa: F401
     from repro.analysis import rules_jax    # noqa: F401
     from repro.analysis import rules_mask   # noqa: F401
+    from repro.analysis import rules_pallas  # noqa: F401
 
 
 def run_rules(modules: Sequence[SourceModule], config

@@ -9,15 +9,17 @@ Lane masking: every packed/lane-batched entrypoint here —
 ``packed_matmul``, ``packed_norm``, ``flash_attention``, ``ssd`` —
 accepts a per-lane ``active`` predicate with an ``active=None``
 zero-overhead fast path (the contract MASK201 in repro.analysis
-enforces). For packed_matmul/packed_norm on the Pallas path the mask is
-fused into the kernel (inactive grid tiles skip the MXU/VPU work —
-packed_gemm / packed_rmsnorm masked variants); for flash_attention/ssd
-(and every XLA fallback) it is a post-hoc where-zero, semantically
-identical but not cheaper — in-kernel ``pl.when`` gating for those two
-is ROADMAP item 3 follow-up. These are the building blocks of the
-pool's three masked-execution modes — "where", "compact" and "kernel"
-— dispatched by core.packing.masked_pool_step (see DESIGN.md §12 for
-when each wins).
+enforces). For packed_matmul/packed_norm/flash_attention on the Pallas
+path the mask is fused into the kernel (inactive grid tiles skip the
+MXU/VPU work — the packed_gemm / packed_rmsnorm / flash masked
+variants; PAL403 in repro.analysis enforces the in-kernel gating); for
+``ssd`` (and every XLA fallback) it is a post-hoc where-zero,
+semantically identical but not cheaper — the ssd in-kernel gate is the
+remaining ROADMAP item 3(a) debt, tracked as the one LINT_BASELINE
+entry. These are the building blocks of the pool's three
+masked-execution modes — "where", "compact" and "kernel" — dispatched
+by core.packing.masked_pool_step (see DESIGN.md §12 for when each
+wins).
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _use_pallas(interpret: bool) -> bool:
@@ -67,9 +70,9 @@ def _mask_lanes(active, *arrays):
     """where-zero an ``active`` (J,)-predicated lane axis onto every
     array's leading dim — inactive lanes become exact zeros, active
     lanes pass through bit-identically. The post-hoc mask is
-    semantically identical to in-kernel gating, just not cheaper; the
-    Pallas-native ``pl.when`` variant for these kernels is ROADMAP
-    item 3 follow-up work."""
+    semantically identical to in-kernel gating, just not cheaper; it
+    backs the XLA fallbacks and the ssd kernel (the remaining
+    Pallas-native gate — ROADMAP item 3(a) follow-up)."""
     mask = jnp.asarray(active) != 0
     outs = tuple(
         jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)), a,
@@ -78,17 +81,56 @@ def _mask_lanes(active, *arrays):
     return outs[0] if len(outs) == 1 else outs
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _flash_attention_masked_core(q, k, v, active, causal: bool = True,
+                                 window: int = 0, interpret: bool = False):
+    if _use_pallas(interpret):
+        from repro.kernels.flash_attention import flash_attention_fwd
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   active=active, interpret=interpret)
+    from repro.models.attention import sdpa_chunked
+    return _mask_lanes(active,
+                       sdpa_chunked(q, k, v, causal=causal, window=window))
+
+
+def _fam_fwd(q, k, v, active, causal, window, interpret):
+    out = _flash_attention_masked_core(q, k, v, active, causal, window,
+                                       interpret)
+    return out, (q, k, v, active)
+
+
+def _fam_bwd(causal, window, interpret, res, g):
+    q, k, v, active = res
+    from repro.models.attention import sdpa_chunked
+    _, vjp = jax.vjp(
+        lambda q, k, v: _mask_lanes(
+            active, sdpa_chunked(q, k, v, causal=causal, window=window)),
+        q, k, v)
+    dq, dk, dv = vjp(g)
+    # integer predicate: its cotangent space is float0, not zeros-like
+    d_active = np.zeros(np.shape(active), dtype=jax.dtypes.float0)
+    return dq, dk, dv, d_active
+
+
+_flash_attention_masked_core.defvjp(_fam_fwd, _fam_bwd)
+
+
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     interpret: bool = False, *, active=None):
     """Flash attention with the lane-mask contract of DESIGN.md §12:
     ``active`` (bool/int (B,), optional) treats the batch dim as lane
     axis — inactive lanes' outputs are exact zeros, active lanes are
     bit-identical to the unmasked call; ``active=None`` is the
-    zero-overhead fast path (the program is byte-unchanged)."""
-    out = _flash_attention_core(q, k, v, causal, window, interpret)
+    zero-overhead fast path (the program is byte-unchanged). On the
+    Pallas path the predicate rides in SMEM and gates the QK/PV dots
+    in-kernel (flash_attention._fwd_masked_kernel); the XLA fallback
+    where-zeroes outside the dots. Both run under a custom_vjp whose
+    backward is recompute through sdpa_chunked."""
     if active is None:
-        return out
-    return _mask_lanes(active, out)
+        return _flash_attention_core(q, k, v, causal, window, interpret)
+    act = jnp.asarray(active, jnp.int32)
+    return _flash_attention_masked_core(q, k, v, act, causal, window,
+                                        interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,12 @@ chunk is exactly the chunk's inputs/outputs, the recurrent state never
 leaves VMEM. Intra-chunk work is the dual (attention-like) form: dense
 (Q,Q) matmuls that feed the MXU. Oracle: kernels.ref.ssd_ref /
 models.ssm.ssd_chunked.
+
+Tracked debt (the one LINT_BASELINE entry, PAL403): this kernel has no
+in-kernel lane gate yet — ``ops.ssd`` masks lanes with a post-hoc
+where-zero, so inactive lanes still feed the MXU. Threading an SMEM
+predicate through the (b, S/Q) grid is the remaining half of ROADMAP
+3(a); the flash-attention kernel shows the pattern.
 """
 from __future__ import annotations
 

@@ -31,6 +31,38 @@ _DTYPE_BYTES = {
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
 }
 
+# --------------------------------------------------------------------------
+# static pallas tile-traffic budgets (PAL406 / kernel_report; DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+#: Nominal sizes for kernel block dims the AST traffic model cannot
+#: resolve to a constant (runtime shape symbols with no declared
+#: default), keyed per file so one kernel's symbols never leak into
+#: another's. Values mirror the repo's benchmark shapes; the model is a
+#: drift detector, so only the ratio to the budget matters.
+PALLAS_NOMINAL_DIMS: Dict[str, Dict[str, int]] = {
+    "src/repro/kernels/flash_attention.py": {"D": 128},   # head dim
+    "src/repro/kernels/fused_rmsnorm.py": {"d": 1024},    # feature dim
+    "src/repro/kernels/ssd_scan.py": {
+        "nh": 8, "hd": 64, "N": 64},  # heads, head dim, state dim
+}
+
+#: Expected HBM bytes streamed per grid step, keyed ``relpath::entry``,
+#: priced at f32 per element (SMEM scalar operands are free). Derived
+#: from the committed BlockSpecs; PAL406 fails the lint when an edit
+#: drifts more than PALLAS_TILE_TOLERANCE from these numbers, so a
+#: BlockSpec change must update its budget in the same review.
+PALLAS_TILE_BUDGETS: Dict[str, float] = {
+    "src/repro/kernels/packed_gemm.py::packed_gemm": 196608.0,
+    "src/repro/kernels/flash_attention.py::flash_attention_fwd": 262144.0,
+    "src/repro/kernels/fused_rmsnorm.py::fused_rmsnorm": 2101248.0,
+    "src/repro/kernels/fused_rmsnorm.py::packed_rmsnorm": 2101248.0,
+    "src/repro/kernels/ssd_scan.py::ssd_scan": 725024.0,
+}
+
+#: Allowed relative drift between the modeled bytes/step and the budget.
+PALLAS_TILE_TOLERANCE = 0.25
+
 _SHAPE_TOKEN = re.compile(r"(\w+)\[([0-9,]*)\]")
 _COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
 _INSTR = re.compile(

@@ -1,0 +1,24 @@
+"""PAL401 bad twin: index-map arity drifts from the grid and block rank.
+
+Two violations: the in-spec map takes one grid index against a rank-2
+grid, and the out-spec map returns three coordinates for a rank-2
+block shape.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale(x):
+    grid = (4, 4)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),
+    )(x)

@@ -1,0 +1,19 @@
+"""PAL401 good twin: every index map matches the grid and block rank."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale(x):
+    grid = (4, 4)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),
+    )(x)

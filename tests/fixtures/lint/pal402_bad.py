@@ -1,0 +1,22 @@
+"""PAL402 bad twin: an index map that is not affine in the grid indices
+(a product of two grid indices) — unprunable by scalar-prefetch index
+rewriting.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def gather_like(x):
+    grid = (4, 4)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i * j, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),
+    )(x)

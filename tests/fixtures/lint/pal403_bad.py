@@ -1,0 +1,25 @@
+"""PAL403 bad twin: the kernel receives the SMEM lane predicate but
+never gates its dot on it — inactive lanes still feed the MXU.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _k(x_ref, w_ref, act_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())))
+
+
+def packed_op(x, w, act):
+    grid = (4,)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((128, 128), lambda j: (j, 0)),
+                  pl.BlockSpec((128, 128), lambda j: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((128, 128), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((512, 128), jnp.float32),
+    )(x, w, act)

@@ -1,0 +1,33 @@
+"""PAL403 good twin: the dot issues only under pl.when on the SMEM lane
+predicate; the inactive branch writes deterministic zeros.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _k(x_ref, w_ref, act_ref, o_ref):
+    ji = pl.program_id(0)
+
+    @pl.when(act_ref[ji] != 0)
+    def _go():
+        o_ref[...] = jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())))
+
+    @pl.when(act_ref[ji] == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def packed_op(x, w, act):
+    grid = (4,)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((128, 128), lambda j: (j, 0)),
+                  pl.BlockSpec((128, 128), lambda j: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((128, 128), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((512, 128), jnp.float32),
+    )(x, w, act)

@@ -1,0 +1,33 @@
+"""PAL406 bad twin, two violations: ``no_budget`` has no registered
+tile-traffic budget at all, and ``drifted``'s registered budget is far
+from what its BlockSpecs actually move per grid step.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def no_budget(x):
+    grid = (4, 4)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),
+    )(x)
+
+
+def drifted(x):
+    grid = (4, 4)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),
+    )(x)

@@ -1,0 +1,21 @@
+"""PAL406 good twin: the registered budget matches the modeled
+per-grid-step traffic (two (8, 128) f32 blocks = 8192 bytes).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def tiled(x):
+    grid = (4, 4)
+    return pl.pallas_call(
+        _k,
+        grid=grid,
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),
+    )(x)

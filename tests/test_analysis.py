@@ -12,7 +12,10 @@ Layout:
   * CLI exit codes on a synthetic tree, including the acceptance
     seed (time.time() into a decision-path module);
   * the meta-test: the repo-wide run is clean against the committed
-    (empty) baseline.
+    baseline, which tolerates exactly one finding (PAL403 on ssd_scan,
+    the tracked ROADMAP 3(a) debt);
+  * PAL-family coverage: fixture pairs per rule, walk determinism,
+    packed_gemm acceptance seeds, and the kernel_report CLI contract.
 """
 import json
 import os
@@ -39,6 +42,27 @@ DECISION_FIXTURES = (
 )
 
 
+#: PAL406 budgets for every fixture pallas_call (keyed relpath::entry).
+#: pal406_bad deliberately omits ``no_budget`` and mis-registers
+#: ``drifted``; everything else matches its modeled bytes exactly so
+#: the PAL fixtures stay rule-pure.
+FIXTURE_TILE_BUDGETS = {
+    "pal401_bad.py::scale": 8192.0,
+    "pal401_good.py::scale": 8192.0,
+    "pal402_bad.py::gather_like": 8192.0,
+    "pal402_good.py::grouped": 8192.0,
+    "pal403_bad.py::packed_op": 196608.0,
+    "pal403_good.py::packed_op": 196608.0,
+    "pal404_bad.py::reduce_rows": 8192.0,
+    "pal404_good.py::reduce_rows": 8192.0,
+    "pal405_bad.py::copy_op": 8192.0,
+    "pal405_bad.py::reduce_rows": 8192.0,
+    "pal405_good.py::reduce_rows": 8192.0,
+    "pal406_bad.py::drifted": 999999.0,
+    "pal406_good.py::tiled": 8192.0,
+}
+
+
 def fixture_config(**overrides):
     base = dict(
         root=FIXDIR,
@@ -52,6 +76,12 @@ def fixture_config(**overrides):
                        "modes_const": "MASKED_MODES",
                        "dispatcher": "masked_pool_step", "param": "mode"},
         acc_modules=("acc301_bad.py", "acc301_good.py"),
+        masked_kernels={
+            "pal403_bad.py": ("packed_op",),
+            "pal403_good.py": ("packed_op",),
+        },
+        tile_budgets=FIXTURE_TILE_BUDGETS,
+        tile_nominal_dims={},
     )
     base.update(overrides)
     return LintConfig(**base)
@@ -95,6 +125,12 @@ RULE_CASES = [
     ("MASK201", "mask201_bad.py", 2, "mask201_good.py"),
     ("MASK202", "mask202_bad.py", 1, "mask202_good.py"),
     ("ACC301", "acc301_bad.py", 2, "acc301_good.py"),
+    ("PAL401", "pal401_bad.py", 2, "pal401_good.py"),
+    ("PAL402", "pal402_bad.py", 1, "pal402_good.py"),
+    ("PAL403", "pal403_bad.py", 1, "pal403_good.py"),
+    ("PAL404", "pal404_bad.py", 2, "pal404_good.py"),
+    ("PAL405", "pal405_bad.py", 2, "pal405_good.py"),
+    ("PAL406", "pal406_bad.py", 2, "pal406_good.py"),
 ]
 
 
@@ -308,12 +344,27 @@ def test_cli_json_output(tmp_path, capsys):
 
 def test_repo_wide_lint_is_clean():
     result = run_lint(default_config())
-    assert result.active == [], (
-        "repo lint must be clean (fix or pragma with a reason):\n"
-        + "\n".join(f.render() for f in result.active))
-    assert result.ok
-    # the committed baseline is EMPTY: nothing is tolerated silently
-    assert bl.load_baseline(default_config().abs_baseline()) == {}
+    assert result.ok, (
+        "repo lint must match the committed baseline exactly:\n"
+        + "\n".join(f.render() for f in result.new)
+        + "\n".join(result.stale))
+    # the only tolerated finding is the tracked ROADMAP 3(a) debt:
+    # ssd_scan has no in-kernel lane gate yet (flash got its gate in
+    # this PR's satellite; ssd is the remaining half)
+    assert [(f.rule, f.path, f.context) for f in result.active] == [
+        ("PAL403", "src/repro/kernels/ssd_scan.py", "ssd_scan")], (
+        "\n".join(f.render() for f in result.active))
+    base = bl.load_baseline(default_config().abs_baseline())
+    assert list(base) == [result.active[0].fingerprint]
+    assert base[result.active[0].fingerprint] == 1
+
+
+def _toplevel_def_names(path):
+    import ast
+    with open(path, "r", encoding="utf-8") as f:
+        tree = ast.parse(f.read())
+    return {n.name for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
 
 
 def test_repo_config_names_real_files():
@@ -322,5 +373,226 @@ def test_repo_config_names_real_files():
     cfg = default_config()
     for rel in (cfg.decision_modules + cfg.acc_modules
                 + tuple(cfg.mask_entrypoints)
+                + tuple(cfg.masked_kernels)
                 + (cfg.mask_dispatch["module"],)):
         assert os.path.exists(os.path.join(cfg.root, rel)), rel
+
+
+def test_repo_config_names_real_functions():
+    """Function-level config rot check: renaming a registered entrypoint
+    (e.g. packed_norm) must fail here instead of silently turning the
+    rule off for it."""
+    cfg = default_config()
+    for rel, names in cfg.mask_entrypoints.items():
+        defs = _toplevel_def_names(os.path.join(cfg.root, rel))
+        for name in names:
+            assert name in defs, (
+                f"MASK_ENTRYPOINTS registers {rel}:{name} but no such "
+                f"top-level def exists")
+    for rel, names in cfg.masked_kernels.items():
+        defs = _toplevel_def_names(os.path.join(cfg.root, rel))
+        for name in names:
+            assert name in defs, (
+                f"MASKED_KERNELS registers {rel}:{name} but no such "
+                f"top-level def exists")
+    # donating factories live in the dispatcher module
+    packing = os.path.join(cfg.root, cfg.mask_dispatch["module"])
+    defs = _toplevel_def_names(packing)
+    for name in cfg.donating_factories:
+        assert name in defs, (
+            f"DONATING_FACTORIES registers {name} but "
+            f"{cfg.mask_dispatch['module']} has no such top-level def")
+    # tile budgets / nominal dims must point at real kernel files too
+    for key in cfg.tile_budgets:
+        rel, _, entry = key.partition("::")
+        path = os.path.join(cfg.root, rel)
+        assert os.path.exists(path), key
+        assert entry in _toplevel_def_names(path), key
+    for rel in cfg.tile_nominal_dims:
+        assert os.path.exists(os.path.join(cfg.root, rel)), rel
+
+
+# -------------------------------------------------------------------------
+# deterministic walk: report bytes must not depend on filesystem order
+# -------------------------------------------------------------------------
+
+def _shuffled_tree(tmp_path, name, order):
+    """A tree with one pallas kernel + one DET002 violation, created in
+    the given file order (os.walk on unsorted filesystems can differ)."""
+    root = tmp_path / name
+    pkg = root / "src" / "repro"
+    pkg.mkdir(parents=True)
+    kernel = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "from jax.experimental import pallas as pl\n\n\n"
+        "def _k(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n\n\n"
+        "def tiled(x):\n"
+        "    return pl.pallas_call(\n"
+        "        _k,\n"
+        "        grid=(4, 4),\n"
+        "        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],\n"
+        "        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((32, 512), jnp.float32),\n"
+        "    )(x)\n")
+    files = {
+        "aaa.py": "import time\n\n\ndef t():\n    return time.time()\n",
+        "mmm.py": kernel,
+        "zzz.py": "import time\n\n\ndef t():\n    return time.time()\n",
+    }
+    for fn in order:
+        (pkg / fn).write_text(files[fn])
+    return root
+
+
+def test_lint_walk_is_deterministic(tmp_path, capsys):
+    """Two trees with identical content but shuffled creation order must
+    produce byte-identical --json reports (driver sorts the walk)."""
+    from repro.analysis import kernel_report as kr_cli
+
+    outs = {"lint": [], "report": []}
+    for name, order in (("one", ("zzz.py", "aaa.py", "mmm.py")),
+                        ("two", ("mmm.py", "zzz.py", "aaa.py"))):
+        root = _shuffled_tree(tmp_path, name, order)
+        lint_cli.main(["--root", str(root), "--json"])
+        outs["lint"].append(capsys.readouterr().out)
+        kr_cli.main(["--root", str(root), "--json"])
+        outs["report"].append(capsys.readouterr().out)
+    assert outs["lint"][0] == outs["lint"][1]
+    assert outs["report"][0] == outs["report"][1]
+    # and the finding order inside one report is the sorted path order
+    payload = json.loads(outs["lint"][0])
+    paths = [f["path"] for f in payload["active"]]
+    assert paths == sorted(paths)
+
+
+# -------------------------------------------------------------------------
+# acceptance seeds: kernel-contract bugs in packed_gemm must exit 1
+# -------------------------------------------------------------------------
+
+REAL_PACKED_GEMM = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..",
+    "src", "repro", "kernels", "packed_gemm.py")
+
+
+def _gemm_tree(tmp_path, mutate=None):
+    pkg = tmp_path / "src" / "repro" / "kernels"
+    pkg.mkdir(parents=True)
+    with open(REAL_PACKED_GEMM, "r", encoding="utf-8") as f:
+        text = f.read()
+    if mutate:
+        old, new = mutate
+        assert old in text, f"seed pattern {old!r} not found"
+        text = text.replace(old, new, 1)
+    (pkg / "packed_gemm.py").write_text(text)
+    return tmp_path
+
+
+def test_cli_unmutated_packed_gemm_is_clean(tmp_path):
+    root = _gemm_tree(tmp_path)
+    assert lint_cli.main(["--root", str(root), "--check"]) == 0
+
+
+def test_cli_seeded_unguarded_accumulator_fails(tmp_path, capsys):
+    """ISSUE acceptance seed: breaking the pl.when(ki == 0) init guard
+    in packed_gemm's kernel trips PAL404 and exits 1."""
+    root = _gemm_tree(tmp_path,
+                      mutate=("@pl.when(ki == 0)", "@pl.when(ki == 7)"))
+    rc = lint_cli.main(["--root", str(root), "--check"])
+    captured = capsys.readouterr().out
+    assert rc == 1
+    assert "PAL404" in captured and "acc_scr" in captured
+
+
+def test_cli_seeded_index_map_arity_bug_fails(tmp_path, capsys):
+    """ISSUE acceptance seed: an index map that drops a grid index trips
+    PAL401 and exits 1."""
+    root = _gemm_tree(tmp_path,
+                      mutate=("lambda j, i, n, k: (j, i, k)",
+                              "lambda j, i, k: (j, i, k)"))
+    rc = lint_cli.main(["--root", str(root), "--check"])
+    captured = capsys.readouterr().out
+    assert rc == 1
+    assert "PAL401" in captured
+
+
+# -------------------------------------------------------------------------
+# kernel_report: the pruning-readiness contract
+# -------------------------------------------------------------------------
+
+def test_kernel_report_classifies_all_committed_maps():
+    """Acceptance criterion: every committed pallas_call index map is
+    classified — the GQA h // G maps as affine_div, everything else
+    affine."""
+    from repro.analysis.kernel_report import build_report
+
+    rep = build_report(default_config())
+    assert rep["n_kernels"] == 5
+    by_entry = {k["entry"]: k for k in rep["kernels"]}
+    assert set(by_entry) == {"flash_attention_fwd", "fused_rmsnorm",
+                             "packed_rmsnorm", "packed_gemm", "ssd_scan"}
+    for k in rep["kernels"]:
+        for spec in k["operands"]:
+            if spec["index_map"] is None:
+                assert spec["memory_space"] == "SMEM"
+                continue
+            for expr, cls in zip(spec["index_map"]["exprs"],
+                                 spec["index_map"]["classes"]):
+                expected = "affine_div" if "//" in expr else "affine"
+                assert cls == expected, (k["entry"], expr, cls)
+    flash = by_entry["flash_attention_fwd"]
+    kv_classes = [s["index_map"]["classification"]
+                  for s in flash["operands"]
+                  if s["index_map"] and "h // G" in s["index_map"]["exprs"][1]]
+    assert kv_classes == ["affine_div", "affine_div"]
+
+
+def test_kernel_report_prunability_tracks_lane_gating():
+    """flash/packed_gemm/packed_rmsnorm carry lane predicates and affine
+    (or affine_div) maps -> prunable; ssd and the unpacked rmsnorm do
+    not (the ssd gap is the tracked baseline entry)."""
+    from repro.analysis.kernel_report import build_report
+
+    rep = build_report(default_config())
+    by_entry = {k["entry"]: k for k in rep["kernels"]}
+    assert by_entry["packed_gemm"]["prunable"]
+    assert by_entry["packed_rmsnorm"]["prunable"]
+    assert by_entry["flash_attention_fwd"]["prunable"]
+    assert by_entry["flash_attention_fwd"]["lane_predicate"]
+    assert not by_entry["ssd_scan"]["lane_predicate"]
+    assert not by_entry["ssd_scan"]["prunable"]
+    assert rep["n_prunable"] == 3
+    # the traffic model agrees with the registered budgets exactly
+    for k in rep["kernels"]:
+        assert k["unresolved_dims"] == []
+        assert k["bytes_per_grid_step"] == k["tile_budget"]
+
+
+def test_kernel_report_check_is_clean_on_repo(capsys):
+    from repro.analysis import kernel_report as kr_cli
+
+    assert kr_cli.main(["--check"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_kernel_report_check_fails_on_seeded_bug(tmp_path, capsys):
+    from repro.analysis import kernel_report as kr_cli
+
+    root = _gemm_tree(tmp_path,
+                      mutate=("@pl.when(ki == 0)", "@pl.when(ki == 7)"))
+    rc = kr_cli.main(["--root", str(root), "--check"])
+    captured = capsys.readouterr().out
+    assert rc == 1
+    assert "PAL404" in captured
+
+
+def test_kernel_report_out_writes_json(tmp_path, capsys):
+    from repro.analysis import kernel_report as kr_cli
+
+    out = tmp_path / "report.json"
+    assert kr_cli.main(["--json", "--out", str(out)]) == 0
+    stdout_payload = json.loads(capsys.readouterr().out)
+    file_payload = json.loads(out.read_text())
+    assert stdout_payload == file_payload
+    assert file_payload["n_kernels"] == 5

@@ -253,8 +253,9 @@ def test_flash_attention_masked_lanes(active):
 
 
 def test_flash_attention_masked_grad_zero_on_inactive():
-    """The mask sits OUTSIDE the custom_vjp: gradients must still flow
-    (active lanes match the dense grad, inactive lanes get zero grad)."""
+    """The masked path is its own custom_vjp (recompute through the
+    masked sdpa): gradients must still flow — active lanes match the
+    dense grad, inactive lanes get zero grad."""
     B, S, H, D = 4, 32, 2, 16
     ks = jax.random.split(jax.random.PRNGKey(29), 3)
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
@@ -267,6 +268,63 @@ def test_flash_attention_masked_grad_zero_on_inactive():
                                        active=active).sum())(q)
     g_dense = jax.grad(
         lambda q_: ops.flash_attention(q_, k, v, causal=True).sum())(q)
+    for b in range(B):
+        if int(active[b]):
+            np.testing.assert_allclose(np.asarray(g_masked[b]),
+                                       np.asarray(g_dense[b]),
+                                       rtol=1e-6, atol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(g_masked[b]),
+                                          np.zeros((S, H, D), np.float32))
+
+
+@pytest.mark.parametrize("active", [(1, 0, 1, 0), (0, 0, 0, 1),
+                                    (1, 1, 1, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 16)])
+def test_flash_native_masked_kernel_interpret(active, causal, window):
+    """The Pallas kernel itself (not the XLA fallback) honors the lane
+    mask: _fwd_masked_kernel gates the QK/PV dots on the SMEM predicate,
+    so active lanes are bit-identical to the unmasked kernel and
+    inactive lanes come out as exact zeros from the finalize step."""
+    B, S, H, D = 4, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(37), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    dense = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                block_q=32, block_k=32, interpret=True)
+    masked = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_k=32,
+                                 active=jnp.asarray(active),
+                                 interpret=True)
+    for b, a in enumerate(active):
+        if a:
+            np.testing.assert_array_equal(np.asarray(masked[b]),
+                                          np.asarray(dense[b]))
+        else:
+            np.testing.assert_array_equal(np.asarray(masked[b]),
+                                          np.zeros((S, H, D), np.float32))
+
+
+def test_flash_native_masked_kernel_grads_interpret():
+    """ops.flash_attention's masked Pallas path (interpret=True) runs
+    the in-kernel gate forward and the masked-sdpa recompute backward;
+    grads match dense on active lanes and are exact zeros elsewhere."""
+    B, S, H, D = 4, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(41), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    active = jnp.asarray([0, 1, 1, 0])
+
+    g_masked = jax.grad(
+        lambda q_: ops.flash_attention(q_, k, v, causal=True,
+                                       interpret=True,
+                                       active=active).sum())(q)
+    g_dense = jax.grad(
+        lambda q_: ops.flash_attention(q_, k, v, causal=True,
+                                       interpret=True).sum())(q)
     for b in range(B):
         if int(active[b]):
             np.testing.assert_allclose(np.asarray(g_masked[b]),
