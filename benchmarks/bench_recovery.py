@@ -1,0 +1,155 @@
+"""Event-log append throughput + recovery time vs log length.
+
+Two questions the durable control plane (core/controlplane.py,
+DESIGN.md §15) must answer with numbers:
+
+  * APPEND — what does durability cost per state transition? Measured
+    as events/s through ``EventLog.append`` with fsync on and off (the
+    spread is the price of the crash-consistency guarantee; tests run
+    with fsync off, production with it on).
+  * RECOVERY — how long does ``ControlPlane.start()`` take as a
+    function of log length? Measured by crashing a seeded tiny-trace
+    run at 25/50/75/100% of its event boundaries and timing the
+    verified re-execution, with and without a snapshot at the halfway
+    point (the snapshot should flatten the curve — that is the whole
+    point of compaction).
+
+Both halves are ADVISORY (wall-clock, machine-dependent): rows go to
+stdout and BENCH_recovery.json, nothing is gated. The correctness of
+recovery itself is gated by tests/test_durability.py.
+
+Usage:
+    python benchmarks/bench_recovery.py            # full run
+    python benchmarks/bench_recovery.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+from benchmarks.common import emit, write_json
+from repro.core import traces as TR
+from repro.core.controlplane import ControlPlane, register_task
+from repro.core.eventlog import EventLog
+from repro.core.faults import CrashHook, CrashInjected
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACES_DIR = os.path.join(REPO_ROOT, "benchmarks", "traces")
+
+
+@register_task("noop")
+def _noop(ctx, payload):
+    return None
+
+
+def bench_append(n: int, fsync: bool) -> float:
+    """Events/s through the durable append path."""
+    d = tempfile.mkdtemp()
+    try:
+        log = EventLog(d, fsync=fsync)
+        log.claim()
+        payload = {"job": 7, "user": "bench", "nodes": [0, 1, 2, 3]}
+        t0 = time.perf_counter()
+        for _ in range(n):
+            log.append("dispatch", payload)
+        dt = time.perf_counter() - t0
+        log.close()
+        return n / dt
+    finally:
+        shutil.rmtree(d)
+
+
+def _tiny_jobs():
+    _, jobs = TR.load_jsonl(TR.trace_path(TRACES_DIR, "tiny"))
+    return [dataclasses.replace(j, submit_t=0.0) for j in jobs]
+
+
+def _drive(cp, jobs):
+    for j in jobs:
+        cp.submit(j.user, "noop", job_key=f"trace-{j.id}", trip=j.trip,
+                  n_tasks=j.n_tasks, bytes_per_lane=j.bytes_per_lane,
+                  interference=j.interference)
+    return cp.run()
+
+
+def bench_recovery(snapshot_at_half: bool) -> list:
+    """[(crash_fraction, log_records, recovery_s)] for crashes at
+    25/50/75/100% of the uncrashed run's event boundaries."""
+    jobs = _tiny_jobs()
+    half = len(jobs) // 2
+    ref = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(ref, n_nodes=4, fsync=False).start()
+        if snapshot_at_half:
+            _drive(cp, jobs[:half])
+            cp.snapshot()
+            cp.compact()
+            _drive(cp, jobs[half:])
+        else:
+            _drive(cp, jobs)
+        total = len(EventLog(ref, fsync=False).replay()) \
+            + (cp.log.latest_snapshot() or (0,))[0]
+        cp.close()
+    finally:
+        shutil.rmtree(ref)
+    rows = []
+    for frac in (0.25, 0.5, 0.75, 1.0):
+        k = max(1, int(total * frac) - 1)
+        d = tempfile.mkdtemp()
+        try:
+            cp = ControlPlane(d, n_nodes=4, fsync=False,
+                              crash_hook=CrashHook(after=k))
+            try:
+                cp.start()
+                if snapshot_at_half:
+                    _drive(cp, jobs[:half])
+                    cp.snapshot()
+                    cp.compact()
+                    _drive(cp, jobs[half:])
+                else:
+                    _drive(cp, jobs)
+            except CrashInjected:
+                pass
+            cp.close()
+            n_rec = len(EventLog(d, fsync=False).replay())
+            t0 = time.perf_counter()
+            cp2 = ControlPlane(d, n_nodes=4, fsync=False).start()
+            dt = time.perf_counter() - t0
+            cp2.close()
+            rows.append((frac, n_rec, dt))
+        finally:
+            shutil.rmtree(d)
+    return rows
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    n_append = 2_000 if smoke else 20_000
+    payload = {"append": {}, "recovery": {}}
+
+    for fsync in (False, True):
+        n = n_append if not fsync else max(200, n_append // 10)
+        rate = bench_append(n, fsync)
+        tag = "fsync" if fsync else "nofsync"
+        emit(f"eventlog_append_{tag}", 1e6 / rate, f"{rate:.0f} events/s")
+        payload["append"][tag] = {"events_per_s": rate, "n": n}
+
+    for snap in (False, True):
+        rows = bench_recovery(snapshot_at_half=snap)
+        tag = "snapshot" if snap else "full_replay"
+        for frac, n_rec, dt in rows:
+            emit(f"recovery_{tag}_{int(frac * 100)}pct", dt * 1e6,
+                 f"{n_rec} records in {dt * 1e3:.1f} ms")
+        payload["recovery"][tag] = [
+            {"crash_fraction": f, "records_replayed": n, "recovery_s": t}
+            for f, n, t in rows]
+
+    write_json("recovery", payload)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,8 @@ DECISION_MODULES = (
     "src/repro/core/triples.py",
     "src/repro/core/scheduler.py",
     "src/repro/core/monitor.py",
+    "src/repro/core/eventlog.py",
+    "src/repro/core/controlplane.py",
 )
 
 #: core/packing.py factories whose returned callable donates argument

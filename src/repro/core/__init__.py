@@ -17,4 +17,9 @@ from repro.core.spatial import (  # noqa: F401
     ewma_interference, legal_configs)
 from repro.core.monitor import TenantGauges  # noqa: F401
 from repro.core.faults import (  # noqa: F401
-    FaultPolicy, NodeDown, TaskCrash, TaskOOM, inject_failures)
+    CrashHook, CrashInjected, FaultPolicy, NodeDown, TaskCrash, TaskOOM,
+    TaskWedged, inject_failures, inject_wedge)
+from repro.core.eventlog import (  # noqa: F401
+    CorruptLogError, EventLog, EventRecord, FencedError, ReplayDivergence,
+    decision_view, diff_decision_logs)
+from repro.core.controlplane import ControlPlane, register_task  # noqa: F401

@@ -143,6 +143,7 @@ class TenantGauge:
     jobs_rejected: int = 0
     jobs_preempted: int = 0             # gangs checkpointed off their nodes
     jobs_resumed: int = 0               # preempted gangs re-dispatched
+    watchdog_restarts: int = 0          # wedged gangs force-restarted
     slices: int = 0                     # spatial slices currently held
     waits: List[float] = dataclasses.field(default_factory=list)
 
@@ -163,6 +164,10 @@ class GangLaneGauge:
     occupancy: float = 0.0              # decayed (EWMA) fraction
     last: float = 0.0                   # latest raw fraction
     samples: int = 0
+    heartbeats: int = 0                 # rounds with task-completion progress
+    silent_rounds: int = 0              # consecutive rounds without progress
+                                        # (the watchdog's wedge signal,
+                                        # DESIGN.md §15)
 
 
 @dataclasses.dataclass
@@ -223,6 +228,23 @@ class TenantGauges:
             d = self.occupancy_decay
             g.occupancy = d * g.occupancy + (1 - d) * frac
         g.samples += 1
+
+    def on_heartbeat(self, user: str, gang: str, silent: int):
+        """One scheduler-round heartbeat for ``gang``: ``silent`` is how
+        many consecutive rounds it has gone without completing a task
+        (0 = progressed this round). The watchdog reads this back as its
+        wedge signal; the gauge keeps it visible in the gang table."""
+        g = self.gang_gauge(gang, user)
+        g.user = g.user or user
+        if silent == 0:
+            g.heartbeats += 1
+        g.silent_rounds = silent
+
+    def on_watchdog_restart(self, user: str):
+        """The watchdog preempted a wedged gang for elastic resume (NOT
+        a fairness preemption — counted separately so the operator can
+        tell policy pressure from fault recovery)."""
+        self.gauge(user).watchdog_restarts += 1
 
     def on_gang_done(self, gang: str):
         """Retire a finished gang's occupancy gauge."""
@@ -348,6 +370,30 @@ class TenantGauges:
             return 0.0
         idx = min(len(ws) - 1, max(0, int(round(q * (len(ws) - 1)))))
         return ws[idx]
+
+    # -------------------------------------------- snapshot (DESIGN.md §15)
+    def state_dict(self) -> dict:
+        """JSON-safe state for control-plane snapshots: the gauges must
+        survive compaction exactly like the accountant does, or a
+        recovered daemon's LLload table forgets history."""
+        return {
+            "occupancy_decay": self.occupancy_decay,
+            "tenants": {u: dataclasses.asdict(g)
+                        for u, g in sorted(self._g.items())},
+            "gangs": {k: dataclasses.asdict(g)
+                      for k, g in sorted(self._gangs.items())},
+            "slices": [dataclasses.asdict(g)
+                       for _, g in sorted(self._slices.items())],
+        }
+
+    def load_state(self, state: dict):
+        self.occupancy_decay = state["occupancy_decay"]
+        self._g = {u: TenantGauge(**row)
+                   for u, row in state["tenants"].items()}
+        self._gangs = {k: GangLaneGauge(**row)
+                       for k, row in state["gangs"].items()}
+        self._slices = {(row["node"], row["slice_index"]): SliceGauge(**row)
+                        for row in state["slices"]}
 
     def table(self) -> str:
         """Render the per-tenant LLload-style snapshot."""

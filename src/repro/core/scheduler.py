@@ -29,7 +29,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core import spatial
 from repro.core import triples as T
 from repro.core import tenancy as ten
-from repro.core.faults import FaultPolicy, NodeDown, TaskCrash, TaskError, TaskOOM
+from repro.core.faults import (FaultPolicy, NodeDown, TaskCrash, TaskError,
+                               TaskOOM, TaskWedged)
 
 if False:                               # type-only; avoid jax import at load
     from repro.core.monitor import TenantGauges
@@ -62,6 +63,10 @@ class TaskCtx:
     slice: Optional[int] = None        # spatial slice hosting this slot
                                        # (MIG instance handle analogue;
                                        # None = whole-node modes)
+    incarnation: int = 0               # gang restart count (preempt/resume
+                                       # cycles) at dispatch time — a
+                                       # watchdog-restarted task can tell
+                                       # it was relaunched (DESIGN.md §15)
 
 
 @dataclasses.dataclass
@@ -260,11 +265,21 @@ class _GangRun:
     def __init__(self, sched: "TriplesScheduler", user: str,
                  tasks: List[Task], trip: T.Triples, nodes: List[int],
                  checkpoint: Optional[GangCheckpoint] = None,
-                 slices: Optional[Tuple[object, Tuple[int, ...]]] = None):
+                 slices: Optional[Tuple[object, Tuple[int, ...]]] = None,
+                 incarnation: int = 0):
         self.sched = sched
         self.user = user
         self.trip = trip
         self.nodes = nodes
+        # per-jobk gang restart count (exported as TaskCtx.incarnation);
+        # jobk 0 is the hosted job, adopt() records the adopted jobs'
+        self.incarnations: Dict[int, int] = {0: incarnation}
+        # (jobk, task_id) keys whose task raised TaskWedged: the hung
+        # process still occupies its slot, so the key stays at the head
+        # of its queue and step_round skips it — only a gang restart
+        # (watchdog preempt -> elastic resume) clears it (DESIGN.md §15).
+        # Membership-only set; sorted() wherever it is emitted.
+        self.wedged: set = set()
         self.slices = slices            # (SliceConfig, owned indices) when
                                         # this gang runs INSIDE spatial
                                         # slices of its node (DESIGN.md §10)
@@ -330,13 +345,15 @@ class _GangRun:
         busy = sum(1 for _, q in alive if q)
         return busy, len(alive)
 
-    def adopt(self, tasks: List[Task], lanes: Optional[int] = None) -> int:
+    def adopt(self, tasks: List[Task], lanes: Optional[int] = None,
+              incarnation: int = 0) -> int:
         """Attach another job's tasks round-robin onto (at most ``lanes``
         of) the free slots. Returns the jobk the tasks are keyed under.
         ``lanes`` must honour the grant from pop_lane_backfill — several
         jobs may be granted disjoint lane shares of one gang in a round."""
         jobk = self._next_jobk
         self._next_jobk += 1
+        self.incarnations[jobk] = incarnation
         self.t_starts[jobk] = time.perf_counter()  # lint: disable=DET001(telemetry anchor for per-job wall_s; never read by a dispatch decision)
         free = [s for s, q in self.queues.items()
                 if not q and s.node not in self.sched.cluster.down]
@@ -363,10 +380,12 @@ class _GangRun:
                 continue
             if not q:
                 continue
+            if q[0] in self.wedged:
+                continue            # hung task pins this slot; only the
+                                    # watchdog restart path unblocks it
             key = q.pop(0)
             progressed = True
-            self.sched._run_one(key, self.by_key[key], slot, self.trip,
-                                self.results, self.failed, self.pending_retry)
+            self.sched._run_one(self, key, self.by_key[key], slot)
         if self.pending_retry:
             self._replan()
             return True
@@ -527,6 +546,10 @@ class _RQState:
         default_factory=dict)              # run id -> rounds charged
     granted_lanes: Dict[int, int] = dataclasses.field(
         default_factory=dict)              # job id -> lanes gauged
+    last_progress: Dict[int, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)              # run id -> (tasks settled,
+                                           # round of last growth) — the
+                                           # watchdog's heartbeat state
     rnd: int = 0
     in_execution: bool = False             # inside the step_round phase —
                                            # preempt() must refuse (it
@@ -537,11 +560,22 @@ class TriplesScheduler:
     def __init__(self, cluster: ClusterState,
                  policy: Optional[FaultPolicy] = None,
                  tenancy: Optional[Tenancy] = None,
-                 checkpoint_dir: Optional[str] = None):
+                 checkpoint_dir: Optional[str] = None,
+                 event_sink: Optional[Callable[[str, dict], None]] = None,
+                 task_executor: Optional[Callable[[Task, TaskCtx], Any]]
+                 = None):
         self.cluster = cluster
         self.policy = policy or FaultPolicy()
         self.tenancy = tenancy
         self.checkpoint_dir = checkpoint_dir
+        # control-plane seams (core/controlplane.py, DESIGN.md §15):
+        # ``event_sink(kind, detail)`` mirrors every _log call into the
+        # durable event log; ``task_executor(task, ctx)`` interposes task
+        # execution so recovery can replay recorded outcomes. Both are
+        # pure pass-throughs when None — the scheduler never branches on
+        # them, which is what keeps logging decision-neutral.
+        self.event_sink = event_sink
+        self.task_executor = task_executor
         self.events: List[Event] = []
         self._alloc_cycles = 0
         self._jobs: Dict[int, GangJob] = {}
@@ -552,6 +586,10 @@ class TriplesScheduler:
     # ------------------------------------------------------------------ util
     def _log(self, kind: str, **detail):
         self.events.append(Event(time.perf_counter(), kind, detail))  # lint: disable=DET001(event-log timestamps are observability only; replay orders by append sequence)
+        if self.event_sink is not None:
+            # the durable record carries NO timestamp — replay equality
+            # is over (seq, kind, detail) only (core/eventlog.py)
+            self.event_sink(kind, detail)
 
     def _persist_gang(self, job_id: int, ckpt: GangCheckpoint, rnd: int):
         """Write the gang's progress cursors through the Checkpointer —
@@ -791,7 +829,8 @@ class TriplesScheduler:
                     tasks = job.tasks
                 run = _GangRun(self, job.user, tasks, trip_eff, [node],
                                checkpoint=ckpt,
-                               slices=(decision.config, indices))
+                               slices=(decision.config, indices),
+                               incarnation=job.preemptions)
                 job.state = "running"
                 st.runs[job.id] = run
                 st.hosts[job.id] = job
@@ -862,6 +901,9 @@ class TriplesScheduler:
         node_time = float(run.node_weight() * rounds_held)
         tn.accountant.charge(job.user, node_time)
         st.charged_rounds.pop(run_id, None)
+        st.last_progress.pop(run_id, None)   # heartbeat state dies with
+                                             # the run (a resume must not
+                                             # inherit stale silence)
         lanes_held = st.granted_lanes.get(
             job.id, run.trip.nnode * job.trip.nppn) \
             if run.slices is not None else run.trip.nnode * job.trip.nppn
@@ -933,6 +975,42 @@ class TriplesScheduler:
                 return True
         return False
 
+    def _watchdog(self) -> bool:
+        """Health watchdog (DESIGN.md §15): a gang that has completed no
+        task for ``FaultPolicy.wedge_timeout_rounds`` consecutive rounds
+        is treated as wedged — its heartbeat (monitor.on_heartbeat) went
+        silent — and is force-restarted through preempt + elastic
+        resume, which bumps the gang incarnation and so relaunches any
+        hung task. This is fault recovery, not fairness pressure: it
+        bypasses PreemptionPolicy.max_preemptions and runs even with no
+        waiter starving. Returns True when any gang was restarted."""
+        timeout = self.policy.wedge_timeout_rounds
+        if not timeout:
+            return False
+        st = self._rq
+        tn = self.tenancy
+        restarted = False
+        for rid in list(st.runs):
+            if rid not in st.active_jobs or rid not in st.last_progress:
+                continue                # resumed this round / host done
+            silent = st.rnd - st.last_progress[rid][1]
+            if silent < timeout:
+                continue
+            if any(st.placed[jid][0] == rid and st.placed[jid][1] != 0
+                   for jid in st.active_jobs):
+                continue                # hosting backfilled jobs: cannot
+                                        # preempt; the livelock guard in
+                                        # run_queued backstops this case
+            run = st.runs[rid]
+            self._log("wedge_timeout", job=rid, user=run.user,
+                      silent_rounds=silent,
+                      wedged=sorted(list(k) for k in run.wedged))
+            if tn.gauges is not None:
+                tn.gauges.on_watchdog_restart(run.user)
+            self.preempt(rid)
+            restarted = True
+        return restarted
+
     def run_queued(self) -> Dict[int, JobResult]:
         """Drain the pending queue, executing admitted gangs CONCURRENTLY.
 
@@ -960,8 +1038,10 @@ class TriplesScheduler:
         submit_round = st.submit_round
         done: Dict[int, JobResult] = {}
         rnd = 0
+        idle_rounds = 0
         while len(tn.queue) or active_jobs:
             st.rnd = rnd
+            events_before = len(self.events)
             # spatial phase: under contention the mode planner may
             # partition a free node and start several queued jobs in
             # isolated slices (DESIGN.md §10) before whole-node dispatch
@@ -990,7 +1070,8 @@ class TriplesScheduler:
                     rem = {t.id for t in job.tasks} & set(ckpt.remaining)
                     tasks = [t for t in job.tasks if t.id in rem]
                     run = _GangRun(self, job.user, tasks, trip_eff, nodes,
-                                   checkpoint=ckpt)
+                                   checkpoint=ckpt,
+                                   incarnation=job.preemptions)
                     job.checkpoint = None
                     self._log("resume", user=job.user, nodes=nodes,
                               job=job.id, width=granted,
@@ -1003,7 +1084,7 @@ class TriplesScheduler:
                               job=job.id,
                               triples=dataclasses.astuple(job.trip))
                     run = _GangRun(self, job.user, job.tasks, job.trip,
-                                   nodes)
+                                   nodes, incarnation=job.preemptions)
                 runs[job.id] = run
                 hosts[job.id] = job
                 placed[job.id] = (job.id, 0)
@@ -1055,7 +1136,8 @@ class TriplesScheduler:
                         ckpt = job.checkpoint
                         rem = set(ckpt.remaining)
                         tasks = [t for t in job.tasks if t.id in rem]
-                        jobk = run.adopt(tasks, lanes=granted)
+                        jobk = run.adopt(tasks, lanes=granted,
+                                         incarnation=job.preemptions)
                         for tid, v in ckpt.results.items():
                             run.results[(jobk, tid)] = v
                         for tid, err in ckpt.failed.items():
@@ -1064,7 +1146,8 @@ class TriplesScheduler:
                         if tn.gauges is not None:
                             tn.gauges.on_resume(job.user)
                     else:
-                        jobk = run.adopt(job.tasks, lanes=granted)
+                        jobk = run.adopt(job.tasks, lanes=granted,
+                                         incarnation=job.preemptions)
                     run.adopted_pack[jobk] = (
                         job.trip.pack_factor(self.cluster.node_spec),
                         float(job.bytes_per_lane))
@@ -1088,8 +1171,12 @@ class TriplesScheduler:
                             if first else None)
             # preemption phase: starved waiters may evict over-share gangs
             preempted = self._maybe_preempt()
+            # watchdog phase: force-restart gangs whose heartbeat went
+            # silent for wedge_timeout_rounds (preempt -> elastic resume)
+            preempted = self._watchdog() or preempted
             if not active_jobs:
                 if preempted:           # victim's nodes free next round
+                    idle_rounds = 0
                     rnd += 1
                     continue
                 if len(tn.queue):       # nothing dispatchable and nothing
@@ -1114,6 +1201,19 @@ class TriplesScheduler:
                     busy, total = run.lane_counts()
                     tn.gauges.on_lane_sample(run.user, f"gang:{rid}",
                                              busy, total)
+            # heartbeat phase: a gang's heartbeat is task settlement —
+            # the round its results+failed count last grew. The watchdog
+            # reads the silence (rounds since) at the TOP of a later
+            # round; the gauges keep it visible in the gang table.
+            for rid, run in runs.items():
+                settled = len(run.results) + len(run.failed)
+                prev = st.last_progress.get(rid)
+                if prev is None or settled > prev[0]:
+                    st.last_progress[rid] = (settled, rnd)
+                if tn.gauges is not None:
+                    tn.gauges.on_heartbeat(
+                        run.user, f"gang:{rid}",
+                        rnd - st.last_progress[rid][1])
             # completion phase: jobs first, then their gangs
             for jid in list(active_jobs):
                 job = active_jobs[jid]
@@ -1156,6 +1256,7 @@ class TriplesScheduler:
                         lanes=lanes,
                         resident_bytes=int(job.bytes_per_lane * lanes))
                 done[jid] = job.result
+                self._log("complete", job=jid, user=job.user)
                 del active_jobs[jid]
             for rid in list(runs):      # release fully-drained gangs
                 run = runs[rid]
@@ -1177,40 +1278,68 @@ class TriplesScheduler:
                         tn.gauges.on_gang_done(f"gang:{rid}")
                     del runs[rid]
                     del hosts[rid]
+            # livelock guard: the loop is deterministic, so a round that
+            # emitted NO event will repeat identically forever (every
+            # head task wedged with the watchdog off, or a wedged gang
+            # the watchdog cannot preempt). Raise instead of spinning.
+            if len(self.events) == events_before:
+                idle_rounds += 1
+                if idle_rounds >= max(2,
+                                      self.policy.wedge_timeout_rounds + 2):
+                    raise RuntimeError(
+                        f"run_queued livelocked: {idle_rounds} identical "
+                        f"no-progress rounds — wedged tasks with no "
+                        f"watchdog? set FaultPolicy.wedge_timeout_rounds")
+            else:
+                idle_rounds = 0
             rnd += 1
         self._rq = None
         return done
 
-    def _run_one(self, key: Tuple[int, int], task: Task,
-                 slot: T.SlotAssignment, trip: T.Triples,
-                 results: dict, failed: dict, pending_retry: list):
+    def _run_one(self, run: _GangRun, key: Tuple[int, int], task: Task,
+                 slot: T.SlotAssignment):
         ctx = TaskCtx(task_id=task.id, node=slot.node, slot=slot.slot,
                       chips=slot.chips, pack_lane=slot.pack_lane,
-                      ntpp=trip.ntpp, slice=slot.slice)
+                      ntpp=run.trip.ntpp, slice=slot.slice,
+                      incarnation=run.incarnations.get(key[0], 0))
         self._log("dispatch", task=task.id, node=slot.node, slot=slot.slot,
                   chips=slot.chips)
         try:
             task.state = "running"
-            task.result = task.fn(ctx)
+            # the control plane interposes here for recovery: a recorded
+            # outcome replays instead of re-executing (DESIGN.md §15)
+            if self.task_executor is not None:
+                task.result = self.task_executor(task, ctx)
+            else:
+                task.result = task.fn(ctx)
             task.state = "done"
-            results[key] = task.result
-            self._log("done", task=task.id)
+            run.results[key] = task.result
+            self._log("done", task=task.id, result=task.result)
         except NodeDown as nd:
             self.cluster.fail_node(nd.node)
             self._log("node_down", node=nd.node, task=task.id)
-            pending_retry.append(key)
+            run.pending_retry.append(key)
+        except TaskWedged:
+            # the task hung: it has NOT failed and has NOT freed its
+            # slot, so the key goes back to the head of the queue and
+            # step_round pins the slot until the watchdog restarts the
+            # gang (preempt -> elastic resume bumps the incarnation)
+            run.wedged.add(key)
+            run.queues[slot].insert(0, key)
+            self._log("wedge", task=task.id, node=slot.node,
+                      slot=slot.slot)
         except TaskOOM as e:
             task.state = "failed"
             self._log("oom", task=task.id, err=str(e))
-            failed[key] = f"oom: {e}"
+            run.failed[key] = f"oom: {e}"
         except TaskError as e:
             task.retries += 1
             if task.retries <= self.policy.max_retries:
                 self._log("retry", task=task.id, attempt=task.retries)
-                pending_retry.append(key)
+                run.pending_retry.append(key)
             else:
                 task.state = "failed"
-                failed[key] = str(e)
+                run.failed[key] = str(e)
                 self._log("fail", task=task.id, err=str(e))
 
     # ------------------------------------------------- job-array comparison

@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import spatial as sp
 from repro.core import tenancy as ten
@@ -251,7 +251,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
              repack: Optional["RepackPolicy"] = None,
              spatial: Optional[sp.ModePlanner] = None,
              pack_slowdown: float = 0.15,
-             half_life: Optional[float] = None) -> SimReport:
+             half_life: Optional[float] = None,
+             recorder: Optional[Callable[[dict], None]] = None) -> SimReport:
     """Event-driven replay of ``jobs`` on ``n_nodes`` whole nodes.
 
     With ``lane_refill`` (shared mode only), a queued job of a user that
@@ -290,6 +291,14 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     ``reconfig_latency_s``, and charged the chip FRACTION it held.
     ``SimReport.spatial_placements``/``reconfigs`` count the modeled
     placements and partition events.
+
+    With ``recorder`` (any callable taking a dict), every job-level
+    decision is emitted as a normalized ``eventlog.DECISION_SCHEMA`` row
+    — the SAME schema the live control plane's event stream reduces to
+    via ``eventlog.decision_view`` — so a live log and a sim log of one
+    workload diff field-by-field (``eventlog.diff_decision_logs``,
+    DESIGN.md §15). Recording is decision-neutral: nothing here reads
+    the recorder back.
     """
     if mode not in ("shared", "exclusive"):
         raise ValueError(f"mode must be shared|exclusive, got {mode!r}")
@@ -302,6 +311,10 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         spatial = None
     acct = ten.FairShareAccountant(quotas, half_life=half_life)
     queue = ten.JobQueue(acct)
+
+    def rec(kind: str, **fields):
+        if recorder is not None:
+            recorder({"kind": kind, **fields})
     pending_payload: Dict[int, Tuple[SimJob, T.Triples, float]] = {}
     rejected: List[Tuple[SimJob, str]] = []
 
@@ -447,6 +460,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                 n_spatial += 1
                 record(job, now, end, T.Triples(1, lanes, eff.ntpp),
                        spatial_placed=True)
+                rec("spatial_dispatch", job=job.id, user=job.user,
+                    lanes=lanes)
                 heapq.heappush(heap, (end, seq, "finish", (job, gen)))
                 seq += 1
 
@@ -491,6 +506,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             gen_of[job.id] = gen
             running[job.id] = (job.id, end, gen)
             record(job, now, end, eff)
+            rec("dispatch_gang", job=job.id, user=job.user, width=eff.nnode)
             heapq.heappush(heap, (end, seq, "finish", (job, gen)))
             seq += 1
             if lane_refill and al.spare > 0:
@@ -533,6 +549,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
             running[job.id] = (aid, end, gen)
             lane_backfills += 1
             record(job, now, end, eff, adopted=True)
+            rec("lane_backfill", job=job.id, user=job.user, lanes=granted)
             heapq.heappush(heap, (end, seq, "finish", (job, gen)))
             seq += 1
 
@@ -588,6 +605,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
         stats_by_job[victim] = dataclasses.replace(
             vstat, preemptions=vstat.preemptions + 1)
         n_preemptions += 1
+        rec("preempt", job=vjob.id, user=vjob.user)
         return True
 
     def schedule_preempt_check(job: SimJob, now: float):
@@ -619,10 +637,12 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                                             admission, job.bytes_per_lane)
                 except MemoryError as e:
                     rejected.append((job, str(e)))
+                    rec("reject", job=job.id, user=job.user, reason=str(e))
                     continue
                 if eff.nnode > n_nodes:
-                    rejected.append(
-                        (job, f"needs {eff.nnode} > {n_nodes} nodes"))
+                    reason = f"needs {eff.nnode} > {n_nodes} nodes"
+                    rejected.append((job, reason))
+                    rec("reject", job=job.id, user=job.user, reason=reason)
                     continue
                 if repack is not None and eff.pack_factor(node_spec) > 1:
                     duration, nrep = repack_duration(
@@ -638,6 +658,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                     est_duration=duration,
                     bytes_per_lane=job.bytes_per_lane,
                     n_slots=eff.total_slots, n_tasks=job.n_tasks))
+                rec("submit", job=job.id, user=job.user, nodes=eff.nnode)
             elif kind == "finish":
                 job, gen = payload
                 cur = running.get(job.id)
@@ -645,6 +666,7 @@ def simulate(jobs: List[SimJob], n_nodes: int,
                     continue            # stale: the job was preempted and
                                         # resumed under a newer generation
                 aid, end, _ = running.pop(job.id)
+                rec("complete", job=job.id, user=job.user)
                 al = allocs[aid]
                 al.outstanding -= 1
                 al.adopted_pack.pop(job.id, None)
@@ -681,6 +703,8 @@ def simulate(jobs: List[SimJob], n_nodes: int,
     for pj in queue.ordered():          # drained heap, still queued: these
         job, _, _ = pending_payload.pop(pj.id)   # can never dispatch
         rejected.append((job, "never dispatched (quota or capacity)"))
+        rec("reject", job=job.id, user=job.user,
+            reason="never dispatched (quota or capacity)")
 
     stats = sorted(stats_by_job.values(),
                    key=lambda s: (s.start_t, s.job.id))

@@ -100,6 +100,16 @@ class FairShareAccountant:
         """Decayed usage over share weight — the fair-share coordinate."""
         return self.usage(user) / self.quota(user).share
 
+    def state_dict(self) -> Dict[str, object]:
+        """Mutable accounting state for control-plane snapshots
+        (core/controlplane.py). Quotas/half_life are configuration, not
+        state: a recovered plane gets them from its constructor."""
+        return {"usage": dict(self._usage), "last_decay": self._last_decay}
+
+    def load_state(self, state: Dict[str, object]):
+        self._usage = {u: float(v) for u, v in state["usage"].items()}
+        self._last_decay = float(state["last_decay"])
+
 
 # ---------------------------------------------------------------------------
 # fair-share preemption policy (DESIGN.md §8)
@@ -272,6 +282,19 @@ class MemoryAdmission:
         if not key:
             return None
         return self.intensity.get(key)
+
+    def state_dict(self) -> Dict[str, object]:
+        """Mutable measurement state for control-plane snapshots
+        (core/controlplane.py) — the footprints and intensities learned
+        from live telemetry, which static config cannot rebuild."""
+        return {"measured": dict(self.measured),
+                "intensity": dict(self.intensity)}
+
+    def load_state(self, state: Dict[str, object]):
+        self.measured = {k: float(v)
+                         for k, v in state["measured"].items()}
+        self.intensity = {k: float(v)
+                          for k, v in state["intensity"].items()}
 
     def max_pack(self, bytes_per_lane: float) -> int:
         """Largest lanes-per-chip count the footprint allows (0 = none)."""

@@ -1,0 +1,566 @@
+"""Durable control plane + crash-injection replay harness (ISSUE 10).
+
+Five families:
+  * crash sweep — kill the control plane at EVERY event boundary of a
+    seeded tiny-trace run, recover from the log, and assert the final
+    accounting, queue order and per-job counters are bit-identical to
+    the uncrashed run (and the final event stream byte-identical);
+    fuzzed over random traces from tests/prop.py;
+  * metamorphic snapshot/compaction — recovering from a snapshot plus
+    the truncated tail yields the same state as replaying from the
+    beginning, and the recovered plane's SUBSEQUENT event stream is
+    byte-identical to the uncrashed continuation;
+  * epoch fencing — a zombie writer holding a stale epoch gets
+    FencedError (no trace in the log) after a takeover, and the new
+    epoch's log stays linearizable;
+  * watchdog — a gang wedged by ``inject_wedge`` is detected by the
+    heartbeat watchdog (FaultPolicy.wedge_timeout_rounds), force-
+    restarted through preempt + elastic resume, and completes with
+    results identical to a never-wedged run; without a watchdog the
+    livelock guard raises instead of spinning forever;
+  * decision neutrality — record emission changes NO decision: the
+    simulator's recorder and the live event sink are pure taps
+    (identical reports/streams on vs off), which is what lets the
+    scheduler-quality gate keep its baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+import pytest
+
+from repro.core import simulate as S
+from repro.core import tenancy as ten
+from repro.core import traces as TR
+from repro.core import triples as T
+from repro.core.controlplane import ControlPlane, register_task
+from repro.core.eventlog import (DECISION_SCHEMA, CorruptLogError, EventLog,
+                                 FencedError, canonical, decision_view,
+                                 diff_decision_logs)
+from repro.core.faults import (CrashHook, CrashInjected, FaultPolicy,
+                               TaskWedged)
+from repro.core.scheduler import ClusterState, Task, Tenancy, TriplesScheduler
+
+from prop import given_cases, random_trace_spec
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACES_DIR = os.path.join(REPO_ROOT, "benchmarks", "traces")
+
+
+@register_task("noop")
+def _noop(ctx, payload):
+    return None
+
+
+@register_task("ident")
+def _ident(ctx, payload):
+    return payload
+
+
+@register_task("wedgy")
+def _wedgy(ctx, payload):
+    """Deterministic wedge: task ids in payload["wedge"] hang until the
+    gang's restart count reaches payload["until"]."""
+    if ctx.task_id in payload["wedge"] and ctx.incarnation < payload["until"]:
+        raise TaskWedged(f"task {ctx.task_id} wedged")
+    return ctx.task_id * 10
+
+
+# ---------------------------------------------------------------------------
+# harness helpers
+# ---------------------------------------------------------------------------
+
+def _stream(log_dir):
+    """(kind, canonical payload) sequence of the durable log — the
+    byte-identity comparison view (seq implicit in order; epoch is a
+    restart counter and excluded by design)."""
+    return [(r.kind, canonical(r.payload))
+            for r in EventLog(log_dir, fsync=False).replay()]
+
+
+def _drive(cp, jobs):
+    """The deterministic driver the crash harness re-runs verbatim after
+    every recovery: job_key idempotency makes re-submission converge and
+    an already-drained queue makes the trailing run() a no-op."""
+    for j in jobs:
+        cp.submit(j.user, "noop", job_key=f"trace-{j.id}", trip=j.trip,
+                  n_tasks=j.n_tasks, bytes_per_lane=j.bytes_per_lane,
+                  interference=j.interference)
+    return cp.run()
+
+
+def _crash_sweep(jobs, n_nodes, boundaries=None, policy=None):
+    """Run uncrashed once, then crash at each boundary, recover,
+    re-drive, and compare digest + stream against the reference."""
+    ref_dir = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(ref_dir, n_nodes=n_nodes, fsync=False,
+                          policy=policy).start()
+        _drive(cp, jobs)
+        ref_digest = cp.state_digest()
+        ref_stream = _stream(ref_dir)
+        cp.close()
+    finally:
+        shutil.rmtree(ref_dir)
+    n_events = len(ref_stream)
+    assert n_events > 0
+    if boundaries is None:
+        boundaries = range(n_events)
+    for k in boundaries:
+        d = tempfile.mkdtemp()
+        try:
+            cp = ControlPlane(d, n_nodes=n_nodes, fsync=False,
+                              policy=policy, crash_hook=CrashHook(after=k))
+            with pytest.raises(CrashInjected):
+                cp.start()
+                _drive(cp, jobs)
+            cp.close()
+            cp2 = ControlPlane(d, n_nodes=n_nodes, fsync=False,
+                               policy=policy).start()
+            _drive(cp2, jobs)
+            assert cp2.state_digest() == ref_digest, \
+                f"state diverged after crash at boundary {k}/{n_events}"
+            assert _stream(d) == ref_stream, \
+                f"log diverged after crash at boundary {k}/{n_events}"
+            cp2.close()
+        finally:
+            shutil.rmtree(d)
+    return n_events
+
+
+def _tiny_jobs():
+    _, jobs = TR.load_jsonl(TR.trace_path(TRACES_DIR, "tiny"))
+    return [dataclasses.replace(j, submit_t=0.0) for j in jobs]
+
+
+# ---------------------------------------------------------------------------
+# crash sweep: every boundary of the tiny canonical trace
+# ---------------------------------------------------------------------------
+
+def test_crash_at_every_boundary_tiny_trace():
+    """The tentpole gate: no matter which single append the crash lands
+    after — mid-submission, mid-dispatch, between a task's dispatch and
+    its outcome, mid-drain — recovery plus a verbatim re-drive of the
+    same workload converges to the uncrashed run's exact state and
+    exact log."""
+    n = _crash_sweep(_tiny_jobs(), n_nodes=4)
+    assert n > 50, "tiny trace should produce a substantial event log"
+
+
+@given_cases(n=4, seed=1010)
+def test_crash_sweep_fuzzed_traces(rng):
+    spec = random_trace_spec(rng, n_jobs=6)
+    spec = dataclasses.replace(spec, tasks_min=1,
+                               tasks_max=1 + int(rng.integers(1, 6)))
+    jobs = [dataclasses.replace(j, submit_t=0.0)
+            for j in TR.generate(spec)]
+    # full sweeps are reserved for the canonical trace; fuzzing samples
+    # three scattered boundaries per random workload
+    probe = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(probe, n_nodes=4, fsync=False).start()
+        _drive(cp, jobs)
+        n_events = len(_stream(probe))
+        cp.close()
+    finally:
+        shutil.rmtree(probe)
+    ks = sorted({int(rng.integers(0, n_events)) for _ in range(3)})
+    _crash_sweep(jobs, n_nodes=4, boundaries=ks)
+
+
+def test_recovered_plane_stays_usable():
+    """Recovery is a boot, not an autopsy: the recovered plane accepts
+    new work under its new epoch."""
+    d = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(d, n_nodes=4, fsync=False,
+                          crash_hook=CrashHook(after=10))
+        with pytest.raises(CrashInjected):
+            cp.start()
+            _drive(cp, _tiny_jobs())
+        cp.close()
+        cp2 = ControlPlane(d, n_nodes=4, fsync=False).start()
+        _drive(cp2, _tiny_jobs())
+        job = cp2.submit("late", "ident", job_key="late-1",
+                         trip=T.Triples(1, 2, 1), payloads=[41, 42])
+        cp2.run()
+        assert job.state == "done"
+        assert job.result.results == {0: 41, 1: 42}
+        cp2.close()
+    finally:
+        shutil.rmtree(d)
+
+
+# ---------------------------------------------------------------------------
+# metamorphic: snapshot + compaction == replay from the beginning
+# ---------------------------------------------------------------------------
+
+def test_snapshot_compaction_metamorphic():
+    jobs = _tiny_jobs()
+    half = len(jobs) // 2
+    full_dir, compact_dir = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        # path A: one continuous log, no snapshot
+        a = ControlPlane(full_dir, n_nodes=4, fsync=False).start()
+        _drive(a, jobs[:half])
+        _drive(a, jobs[half:])
+        # path B: same workload with a snapshot + compaction between the
+        # two batches — the truncated tail must carry the same meaning
+        b = ControlPlane(compact_dir, n_nodes=4, fsync=False).start()
+        _drive(b, jobs[:half])
+        b.snapshot()
+        removed = b.compact()
+        assert removed, "compaction should drop the covered segment"
+        _drive(b, jobs[half:])
+        assert a.state_digest() == b.state_digest()
+        dig = b.state_digest()
+        a.close()
+        b.close()
+        # recovery from the compacted log reproduces the same state...
+        b2 = ControlPlane(compact_dir, n_nodes=4, fsync=False).start()
+        assert b2.state_digest() == dig
+        # ...and its SUBSEQUENT stream is byte-identical to the
+        # uncrashed continuation's
+        a2 = ControlPlane(full_dir, n_nodes=4, fsync=False).start()
+        extra = [dataclasses.replace(j, submit_t=0.0,
+                                     id=j.id + 10_000)
+                 for j in jobs[:3]]
+        before_a = len(_stream(full_dir))
+        before_b = len(_stream(compact_dir))
+        _drive(a2, extra)
+        _drive(b2, extra)
+        assert _stream(full_dir)[before_a:] \
+            == _stream(compact_dir)[before_b:]
+        a2.close()
+        b2.close()
+    finally:
+        shutil.rmtree(full_dir)
+        shutil.rmtree(compact_dir)
+
+
+def test_snapshot_requires_quiescence_and_rolls_segment():
+    d = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(d, n_nodes=4, fsync=False).start()
+        cp.submit("u", "ident", job_key="k1", trip=T.Triples(1, 2, 1),
+                  payloads=[1])
+        cp.run()
+        segs_before = sorted(f for f in os.listdir(d)
+                             if f.startswith("segment-"))
+        cp.snapshot()
+        segs_after = sorted(f for f in os.listdir(d)
+                            if f.startswith("segment-"))
+        assert len(segs_after) == len(segs_before) + 1, \
+            "snapshot must roll to a fresh segment"
+        # appends after compaction survive it (the active segment is
+        # never unlinked)
+        cp.compact()
+        cp.submit("u", "ident", job_key="k2", trip=T.Triples(1, 2, 1),
+                  payloads=[2])
+        cp.run()
+        kinds = [k for k, _ in _stream(d)]
+        assert "job_spec" in kinds and "complete" in kinds
+        cp.close()
+    finally:
+        shutil.rmtree(d)
+
+
+# ---------------------------------------------------------------------------
+# epoch fencing
+# ---------------------------------------------------------------------------
+
+def test_epoch_fencing_eventlog():
+    d = tempfile.mkdtemp()
+    try:
+        log1 = EventLog(d, fsync=False)
+        assert log1.claim() == 1
+        log1.append("a", {"x": 1})
+        log2 = EventLog(d, fsync=False)
+        assert log2.claim() == 2
+        # the zombie's append is rejected BEFORE writing: no fork
+        with pytest.raises(FencedError):
+            log1.append("b", {"x": 2})
+        log2.append("c", {"x": 3})
+        recs = EventLog(d, fsync=False).replay()
+        assert [r.seq for r in recs] == [1, 2]
+        assert [r.kind for r in recs] == ["a", "c"], \
+            "the fenced append must leave no trace"
+        assert [r.epoch for r in recs] == [1, 2]
+        log1.close()
+        log2.close()
+    finally:
+        shutil.rmtree(d)
+
+
+def test_epoch_fencing_control_plane():
+    d = tempfile.mkdtemp()
+    try:
+        cp1 = ControlPlane(d, n_nodes=4, fsync=False).start()
+        cp1.submit("u", "ident", job_key="k1", trip=T.Triples(1, 2, 1),
+                   payloads=[7])
+        cp1.run()
+        # takeover: a second plane claims the log
+        cp2 = ControlPlane(d, n_nodes=4, fsync=False).start()
+        assert cp2.epoch == cp1.epoch + 1
+        with pytest.raises(FencedError):
+            cp1.submit("u", "ident", job_key="k2",
+                       trip=T.Triples(1, 2, 1), payloads=[8])
+        # the zombie's rejected submit corrupted nothing: the live plane
+        # keeps appending and the chain stays linearizable
+        cp2.submit("u", "ident", job_key="k3", trip=T.Triples(1, 2, 1),
+                   payloads=[9])
+        cp2.run()
+        recs = EventLog(d, fsync=False).replay()
+        assert [r.seq for r in recs] == list(range(1, len(recs) + 1))
+        assert all(a.epoch <= b.epoch for a, b in zip(recs, recs[1:]))
+        cp1.close()
+        cp2.close()
+    finally:
+        shutil.rmtree(d)
+
+
+def test_replay_tolerates_torn_tail_only():
+    d = tempfile.mkdtemp()
+    try:
+        log = EventLog(d, fsync=False)
+        log.claim()
+        log.append("a", {"x": 1})
+        log.append("b", {"x": 2})
+        log.close()
+        seg = sorted(f for f in os.listdir(d)
+                     if f.startswith("segment-"))[0]
+        path = os.path.join(d, seg)
+        # torn final line: dropped silently (crash mid-append)
+        with open(path, "a") as f:
+            f.write('{"seq": 3, "epoch": 1, "ki')
+        recs = EventLog(d, fsync=False).replay()
+        assert [r.kind for r in recs] == ["a", "b"]
+        # damage anywhere else: refuse to guess
+        with open(path) as f:
+            lines = f.read().splitlines()
+        lines[0] = lines[0][:10]
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        with pytest.raises(CorruptLogError):
+            EventLog(d, fsync=False).replay()
+    finally:
+        shutil.rmtree(d)
+
+
+# ---------------------------------------------------------------------------
+# watchdog: wedge detection -> forced restart -> identical results
+# ---------------------------------------------------------------------------
+
+def _watchdog_sched(wedge_tasks, n_tasks=6):
+    cl = ClusterState(4)
+    sched = TriplesScheduler(
+        cl, tenancy=Tenancy.create(node_spec=cl.node_spec),
+        policy=FaultPolicy(wedge_timeout_rounds=3))
+    payload = {"wedge": list(wedge_tasks), "until": 1}
+    tasks = [Task(id=i, fn=(lambda p: (lambda ctx: _wedgy(ctx, p)))(payload))
+             for i in range(n_tasks)]
+    job = sched.submit("u", tasks, T.Triples(2, 2, 1))
+    sched.run_queued()
+    return sched, job
+
+
+def test_watchdog_restarts_wedged_gang():
+    """A wedged task pins its slot silently; the heartbeat watchdog must
+    notice the gang stopped settling tasks, force-preempt it past
+    max_preemptions, and elastic-resume it — after which the restarted
+    incarnation completes with results identical to a clean run."""
+    _, clean = _watchdog_sched(wedge_tasks=())
+    sched, wedged = _watchdog_sched(wedge_tasks=(2,))
+    assert wedged.state == "done"
+    assert wedged.result.results == clean.result.results
+    assert wedged.result.failed == clean.result.failed == {}
+    kinds = [e.kind for e in sched.events]
+    assert kinds.count("wedge") >= 1
+    assert kinds.count("wedge_timeout") == 1
+    assert kinds.count("resume") == 1
+    assert wedged.result.preemptions == 1
+    wt = next(e.detail for e in sched.events if e.kind == "wedge_timeout")
+    assert wt["silent_rounds"] >= 3
+    assert [0, 2] in wt["wedged"] or [0, 2] == wt["wedged"][0]
+
+
+def test_wedge_without_watchdog_hits_livelock_guard():
+    """wedge_timeout_rounds=0 disables the watchdog; the scheduler must
+    fail loudly (pointing at the knob) instead of spinning forever."""
+    cl = ClusterState(4)
+    sched = TriplesScheduler(cl,
+                             tenancy=Tenancy.create(node_spec=cl.node_spec))
+    payload = {"wedge": [2], "until": 99}
+    tasks = [Task(id=i, fn=(lambda p: (lambda ctx: _wedgy(ctx, p)))(payload))
+             for i in range(4)]
+    sched.submit("u", tasks, T.Triples(2, 2, 1))
+    with pytest.raises(RuntimeError, match="wedge_timeout_rounds"):
+        sched.run_queued()
+
+
+def test_watchdog_through_control_plane_crash_sweep():
+    """The wedge -> watchdog -> restart sequence is itself durable:
+    crash anywhere through a wedged run and recovery converges to the
+    same final state as the uncrashed wedged run."""
+    policy = FaultPolicy(wedge_timeout_rounds=3)
+
+    class _Jobs:
+        pass
+
+    def drive(cp):
+        cp.submit("u", "wedgy", job_key="w1", trip=T.Triples(2, 2, 1),
+                  payloads=[{"wedge": [2], "until": 1}] * 6)
+        return cp.run()
+
+    ref_dir = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(ref_dir, n_nodes=4, fsync=False,
+                          policy=policy).start()
+        drive(cp)
+        ref_digest = cp.state_digest()
+        ref_stream = _stream(ref_dir)
+        cp.close()
+    finally:
+        shutil.rmtree(ref_dir)
+    kinds = [k for k, _ in ref_stream]
+    assert "wedge" in kinds and "wedge_timeout" in kinds
+    for k in range(len(ref_stream)):
+        d = tempfile.mkdtemp()
+        try:
+            cp = ControlPlane(d, n_nodes=4, fsync=False, policy=policy,
+                              crash_hook=CrashHook(after=k))
+            with pytest.raises(CrashInjected):
+                cp.start()
+                drive(cp)
+            cp.close()
+            cp2 = ControlPlane(d, n_nodes=4, fsync=False,
+                               policy=policy).start()
+            drive(cp2)
+            assert cp2.state_digest() == ref_digest, f"boundary {k}"
+            assert _stream(d) == ref_stream, f"boundary {k}"
+            cp2.close()
+        finally:
+            shutil.rmtree(d)
+
+
+# ---------------------------------------------------------------------------
+# decision neutrality: recording changes nothing
+# ---------------------------------------------------------------------------
+
+def _sim_kw():
+    return dict(mode="shared", lane_refill=True,
+                admission=ten.MemoryAdmission(T.NodeSpec()))
+
+
+def test_sim_recorder_is_decision_neutral():
+    jobs = _tiny_jobs()
+    rows = []
+    plain = S.simulate(jobs, 4, **_sim_kw())
+    taped = S.simulate(jobs, 4, recorder=rows.append, **_sim_kw())
+    assert rows, "recorder must observe the run"
+    assert plain.makespan == taped.makespan
+    assert [(s.job.id, s.start_t, s.end_t, s.pack_factor, s.preemptions)
+            for s in plain.stats] \
+        == [(s.job.id, s.start_t, s.end_t, s.pack_factor, s.preemptions)
+            for s in taped.stats]
+    assert [(j.id, r) for j, r in plain.rejected] \
+        == [(j.id, r) for j, r in taped.rejected]
+    for row in rows:
+        assert set(row) - {"kind"} == set(DECISION_SCHEMA[row["kind"]]), \
+            f"recorder row drifted off the shared schema: {row}"
+
+
+def test_live_event_sink_is_decision_neutral():
+    jobs = _tiny_jobs()
+
+    def run(sink):
+        cl = ClusterState(4)
+        sched = TriplesScheduler(
+            cl, tenancy=Tenancy.create(node_spec=cl.node_spec),
+            event_sink=sink)
+        for j in jobs:
+            tasks = [Task(id=i, fn=lambda ctx: None)
+                     for i in range(j.n_tasks)]
+            sched.submit(j.user, tasks, j.trip,
+                         bytes_per_lane=j.bytes_per_lane,
+                         interference=j.interference)
+        sched.run_queued()
+        return [(e.kind, canonical(json.loads(canonical(e.detail))))
+                for e in sched.events]
+
+    tap = []
+    plain = run(None)
+    taped = run(lambda kind, detail: tap.append(kind))
+    assert plain == taped, "the sink must not perturb a single decision"
+    assert len(tap) == len(taped)
+
+
+def test_live_and_sim_logs_diff_on_shared_schema():
+    """The whole point of one record schema: a live log and a sim log of
+    the same workload reduce to comparable decision rows. Submission
+    and rejection decisions must agree exactly; dispatch rows may
+    legitimately differ (rounds vs virtual time, lane-adoption
+    eagerness) but every divergence must be visible in the diff, not
+    hidden by schema mismatch."""
+    jobs = _tiny_jobs()
+    sim_rows = []
+    S.simulate(jobs, 4, recorder=sim_rows.append, **_sim_kw())
+    cl = ClusterState(4)
+    sched = TriplesScheduler(cl,
+                             tenancy=Tenancy.create(node_spec=cl.node_spec))
+    gangs = {}
+    for j in jobs:
+        tasks = [Task(id=i, fn=lambda ctx: None) for i in range(j.n_tasks)]
+        gangs[j.id] = sched.submit(j.user, tasks, j.trip,
+                                   bytes_per_lane=j.bytes_per_lane,
+                                   interference=j.interference)
+    sched.run_queued()
+    live_rows = decision_view((e.kind, e.detail) for e in sched.events)
+    # live job ids are scheduler-assigned: rename onto trace ids
+    rename = {g.id: jid for jid, g in gangs.items()}
+    live_rows = [{**r, "job": rename[r["job"]]} for r in live_rows]
+    live_submits = [r for r in live_rows if r["kind"] == "submit"]
+    sim_submits = [r for r in sim_rows if r["kind"] == "submit"]
+    assert not diff_decision_logs(live_submits, sim_submits)
+    live_done = sorted(r["job"] for r in live_rows
+                       if r["kind"] == "complete")
+    sim_done = sorted(r["job"] for r in sim_rows if r["kind"] == "complete")
+    assert live_done == sim_done, \
+        "both engines must complete exactly the same jobs"
+
+
+def test_scheduler_quality_gate_unchanged_with_logging():
+    """The gate's re-baseline rule: record emission must be provably
+    decision-neutral — replaying the tiny trace with the full durable
+    control plane yields the same per-job outcomes as the bare
+    scheduler, so BENCH_HISTORY baselines stay valid as-is."""
+    jobs = _tiny_jobs()
+    cl = ClusterState(4)
+    bare = TriplesScheduler(cl,
+                            tenancy=Tenancy.create(node_spec=cl.node_spec))
+    gangs = {}
+    for j in jobs:
+        tasks = [Task(id=i, fn=lambda ctx: None) for i in range(j.n_tasks)]
+        gangs[j.id] = bare.submit(j.user, tasks, j.trip,
+                                  bytes_per_lane=j.bytes_per_lane,
+                                  interference=j.interference)
+    bare.run_queued()
+    d = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(d, n_nodes=4, fsync=False).start()
+        _drive(cp, jobs)
+        for j in jobs:
+            g = gangs[j.id]
+            c = cp.sched._jobs[cp._by_key[f"trace-{j.id}"]]
+            assert (g.state, g.preemptions) == (c.state, c.preemptions)
+            if g.result is not None:
+                assert g.result.wait_rounds == c.result.wait_rounds
+                assert sorted(g.result.results) == sorted(c.result.results)
+        cp.close()
+    finally:
+        shutil.rmtree(d)
