@@ -15,8 +15,10 @@ Guarantees:
     line is detected and dropped on replay);
   * total order — records carry monotonic sequence numbers starting at
     1 with no gaps; replay validates the chain;
-  * epoch fencing — every writer claims ``EPOCH`` (an atomically
-    renamed counter file) before appending; a takeover bumps it, and a
+  * epoch fencing — every writer claims the next epoch before
+    appending by atomically creating a per-epoch marker file
+    (``EPOCH-<n>``, O_CREAT|O_EXCL — concurrent claimants serialize,
+    the loser re-bids a higher epoch); a takeover bumps it, and a
     zombie writer holding a stale epoch gets FencedError instead of a
     fork in the history. Within one directory the record stream is
     linearizable: seq strictly increasing, epochs non-decreasing;
@@ -92,23 +94,67 @@ class EventLog:
         self._next_seq: Optional[int] = None
         self._fh = None
         self._active: Optional[str] = None      # segment being appended
+        self.recovered: List[EventRecord] = []  # claim()'s replay
         os.makedirs(log_dir, exist_ok=True)
 
     # ------------------------------------------------------------ fencing
     def stored_epoch(self) -> int:
+        """Highest epoch any claimant has won: the max over the atomic
+        per-epoch marker files and the human-readable ``EPOCH`` mirror
+        (which may lag one beat behind the newest marker)."""
+        best = 0
         path = os.path.join(self.log_dir, EPOCH_FILE)
-        if not os.path.exists(path):
-            return 0
-        with open(path) as f:
-            return int(f.read().strip() or 0)
+        if os.path.exists(path):
+            with open(path) as f:
+                try:
+                    best = int(f.read().strip() or 0)
+                except ValueError:
+                    best = 0    # garbled mirror: markers are the truth
+        prefix = EPOCH_FILE + "-"
+        for name in os.listdir(self.log_dir):
+            if name.startswith(prefix):
+                try:
+                    best = max(best, int(name[len(prefix):]))
+                except ValueError:
+                    pass
+        return best
 
     def claim(self) -> int:
-        """Become the writer: bump the epoch counter (atomic rename) and
-        open a fresh segment. Any writer holding the previous epoch is
-        fenced from this moment — its next append raises."""
-        epoch = self.stored_epoch() + 1
+        """Become the writer: atomically win the next epoch, repair any
+        torn tail, and open a fresh segment. Any writer holding an
+        older epoch is fenced from this moment — its next append
+        raises.
+
+        The epoch is won by creating the ``EPOCH-<n>`` marker with
+        O_CREAT|O_EXCL: only one claimant can create a given marker, so
+        two processes claiming concurrently serialize — the loser
+        re-reads and bids on a higher epoch instead of sharing one.
+        The records replayed while sizing ``_next_seq`` are retained in
+        ``self.recovered`` so recovery need not parse the log twice."""
+        while True:
+            epoch = self.stored_epoch() + 1
+            marker = os.path.join(self.log_dir,
+                                  f"{EPOCH_FILE}-{epoch:06d}")
+            try:
+                fd = os.open(marker, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                continue        # lost the race for this epoch; bid higher
+            try:
+                os.write(fd, f"{epoch}\n".encode())
+                if self.fsync:
+                    os.fsync(fd)
+            finally:
+                os.close(fd)
+            break
+        # human-readable mirror (atomic rename; tmp name is unique per
+        # won epoch so concurrent claimants never share one).
+        # stored_epoch() takes the max over markers and mirror, so a
+        # slow mirror write can never un-fence a newer claimant.
+        # Markers are NEVER deleted — one tiny file per restart —
+        # because removing marker N would let a straggler holding a
+        # stale stored_epoch() read re-win epoch N with O_EXCL
         path = os.path.join(self.log_dir, EPOCH_FILE)
-        tmp = path + ".tmp"
+        tmp = f"{path}.tmp-{epoch:06d}"
         with open(tmp, "w") as f:
             f.write(f"{epoch}\n")
             f.flush()
@@ -116,10 +162,46 @@ class EventLog:
                 os.fsync(f.fileno())
         os.replace(tmp, path)
         self.epoch = epoch
-        records = self.replay()
-        self._next_seq = (records[-1].seq + 1) if records else 1
+        self._repair_torn_tail()
+        self.recovered = self.replay()
+        snap = self.latest_snapshot()
+        upto = snap[0] if snap is not None else 0
+        last = self.recovered[-1].seq if self.recovered else 0
+        # the snapshot floors the counter: after snapshot()+compact()
+        # every segment may be empty, and restarting seq at 1 would
+        # make new records invisible to replay-after-snapshot
+        self._next_seq = max(last, upto) + 1
         self._open_segment()
         return epoch
+
+    def _repair_torn_tail(self):
+        """Physically truncate a torn final line (crash mid-append) so
+        the tear cannot be buried behind the fresh segment this claim
+        is about to open — replay() only forgives a torn line at the
+        very end of the stream. Truncation is one syscall on the tail
+        bytes; a crash here just leaves the tear for the next claim."""
+        for name in reversed(self._segments()):
+            path = os.path.join(self.log_dir, name)
+            with open(path, "rb") as f:
+                data = f.read()
+            if not data.strip():
+                continue            # empty segment from a dead claimant
+            body = data.rstrip(b"\n")
+            nl = body.rfind(b"\n")
+            last = body[nl + 1:]
+            try:
+                row = json.loads(last.decode())
+                EventRecord(seq=row["seq"], epoch=row["epoch"],
+                            kind=row["kind"], payload=row["payload"])
+            except (ValueError, KeyError, UnicodeDecodeError):
+                os.truncate(path, nl + 1 if nl >= 0 else 0)
+                if self.fsync:
+                    fd = os.open(path, os.O_RDWR)
+                    try:
+                        os.fsync(fd)
+                    finally:
+                        os.close(fd)
+            return      # only the last non-empty segment can be torn
 
     def _open_segment(self):
         name = f"{_SEG_PREFIX}{self._next_seq:010d}-e{self.epoch:06d}.jsonl"
@@ -179,14 +261,22 @@ class EventLog:
     def replay(self, after_seq: int = 0) -> List[EventRecord]:
         """All durable records with ``seq > after_seq``, validating the
         chain: contiguous seq, non-decreasing epochs. A torn final line
-        (crash mid-write of the very last record) is dropped; any other
-        damage raises CorruptLogError."""
+        (crash mid-write of the very last record — possibly followed
+        only by empty segments a dead claimant left behind) is dropped;
+        any other damage raises CorruptLogError. Writers additionally
+        truncate the tear during claim() so it can never end up buried
+        behind live records."""
         records: List[EventRecord] = []
-        segs = self._segments()
-        for si, name in enumerate(segs):
-            path = os.path.join(self.log_dir, name)
-            with open(path) as f:
-                lines = f.read().splitlines()
+        segs: List[Tuple[str, List[str]]] = []
+        for name in self._segments():
+            with open(os.path.join(self.log_dir, name)) as f:
+                segs.append((name, f.read().splitlines()))
+        last_pos = None     # (seg idx, line idx) of the stream's tail
+        for si, (_, lines) in enumerate(segs):
+            for li, line in enumerate(lines):
+                if line.strip():
+                    last_pos = (si, li)
+        for si, (name, lines) in enumerate(segs):
             for li, line in enumerate(lines):
                 if not line.strip():
                     continue
@@ -196,7 +286,7 @@ class EventLog:
                                       kind=row["kind"],
                                       payload=row["payload"])
                 except (ValueError, KeyError) as e:
-                    if si == len(segs) - 1 and li == len(lines) - 1:
+                    if (si, li) == last_pos:
                         break           # torn tail: crash mid-append
                     raise CorruptLogError(
                         f"{name}:{li + 1}: unparseable record") from e

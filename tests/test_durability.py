@@ -270,6 +270,59 @@ def test_snapshot_requires_quiescence_and_rolls_segment():
         shutil.rmtree(d)
 
 
+def test_seq_resumes_after_snapshot_compact_restart():
+    """Crash right after snapshot()+compact() leaves only empty
+    segments; the next claim must floor its seq counter at the
+    snapshot's upto — a reset to 1 would make every new record
+    invisible to replay-after-snapshot (silent loss of acknowledged
+    events)."""
+    d = tempfile.mkdtemp()
+    try:
+        log = EventLog(d, fsync=False)
+        log.claim()
+        for i in range(5):
+            log.append("a", {"i": i})
+        log.write_snapshot({"n": 5}, upto=5)
+        log.compact()
+        log.close()             # crash before any post-snapshot append
+        log2 = EventLog(d, fsync=False)
+        log2.claim()
+        rec = log2.append("b", {"i": 5})
+        assert rec.seq == 6, "seq must resume past the snapshot"
+        assert [r.seq for r in EventLog(d, fsync=False).replay(
+            after_seq=5)] == [6]
+        log2.close()
+    finally:
+        shutil.rmtree(d)
+
+
+def test_control_plane_keeps_events_appended_after_compaction():
+    """The control-plane shape of the same loss bug: recover from a
+    compacted-at-quiescence log, accept new work, and make sure a
+    SECOND recovery still sees that work."""
+    jobs = _tiny_jobs()
+    d = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(d, n_nodes=4, fsync=False).start()
+        _drive(cp, jobs[:2])
+        cp.snapshot()
+        cp.compact()
+        cp.close()              # restart with an empty post-snapshot tail
+        cp2 = ControlPlane(d, n_nodes=4, fsync=False).start()
+        job = cp2.submit("late", "ident", job_key="post-compact",
+                         trip=T.Triples(1, 2, 1), payloads=[5])
+        cp2.run()
+        assert job.state == "done"
+        dig = cp2.state_digest()
+        cp2.close()
+        cp3 = ControlPlane(d, n_nodes=4, fsync=False).start()
+        assert cp3.state_digest() == dig, \
+            "post-compaction appends must survive the next recovery"
+        cp3.close()
+    finally:
+        shutil.rmtree(d)
+
+
 # ---------------------------------------------------------------------------
 # epoch fencing
 # ---------------------------------------------------------------------------
@@ -348,6 +401,105 @@ def test_replay_tolerates_torn_tail_only():
             f.write("\n".join(lines) + "\n")
         with pytest.raises(CorruptLogError):
             EventLog(d, fsync=False).replay()
+    finally:
+        shutil.rmtree(d)
+
+
+def test_claim_truncates_torn_tail_before_opening_new_segment():
+    """A genuine mid-write crash leaves a torn line in the old
+    segment; claim() opens a NEW segment, so if the tear merely got
+    skipped (not truncated) it would sit mid-stream and every later
+    recovery would raise CorruptLogError."""
+    d = tempfile.mkdtemp()
+    try:
+        log = EventLog(d, fsync=False)
+        log.claim()
+        log.append("a", {"x": 1})
+        log.append("b", {"x": 2})
+        log.close()
+        seg = sorted(f for f in os.listdir(d)
+                     if f.startswith("segment-"))[0]
+        with open(os.path.join(d, seg), "a") as f:
+            f.write('{"seq": 3, "epoch": 1, "ki')    # crash mid-append
+        log2 = EventLog(d, fsync=False)
+        log2.claim()            # must repair the tear, not bury it
+        rec = log2.append("c", {"x": 3})
+        assert rec.seq == 3
+        recs = EventLog(d, fsync=False).replay()
+        assert [(r.seq, r.kind) for r in recs] \
+            == [(1, "a"), (2, "b"), (3, "c")]
+        log2.close()
+        # the incarnation after THAT also recovers cleanly
+        log3 = EventLog(d, fsync=False)
+        log3.claim()
+        assert log3.last_seq == 3
+        log3.close()
+    finally:
+        shutil.rmtree(d)
+
+
+def test_concurrent_claims_win_distinct_epochs():
+    """Two processes claiming at once must serialize: the O_EXCL
+    per-epoch marker lets exactly one claimant win each epoch, so the
+    loser lands on a HIGHER epoch (and fences the other) instead of
+    both writing under the same one and forking the history."""
+    import threading
+    d = tempfile.mkdtemp()
+    try:
+        n = 8
+        logs = [EventLog(d, fsync=False) for _ in range(n)]
+        barrier = threading.Barrier(n)
+        epochs = [None] * n
+
+        def go(i):
+            barrier.wait()
+            epochs[i] = logs[i].claim()
+
+        threads = [threading.Thread(target=go, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sorted(epochs) == list(range(1, n + 1)), \
+            "every claimant must win a distinct epoch"
+        for log, e in zip(logs, epochs):
+            if e == n:          # only the newest incarnation may write
+                log.append("w", {"e": e})
+            else:
+                with pytest.raises(FencedError):
+                    log.append("w", {"e": e})
+        recs = EventLog(d, fsync=False).replay()
+        assert [(r.seq, r.epoch) for r in recs] == [(1, n)]
+        for log in logs:
+            log.close()
+    finally:
+        shutil.rmtree(d)
+
+
+def test_recovery_parses_log_exactly_once(monkeypatch):
+    """claim() already chain-validates the whole log to size its seq
+    counter; ControlPlane.start() must reuse that replay, not parse the
+    directory a second time (recovery time is what bench_recovery.py
+    measures)."""
+    d = tempfile.mkdtemp()
+    try:
+        cp = ControlPlane(d, n_nodes=4, fsync=False).start()
+        _drive(cp, _tiny_jobs()[:2])
+        dig = cp.state_digest()
+        cp.close()
+        calls = []
+        orig = EventLog.replay
+
+        def counted(self, after_seq=0):
+            calls.append(1)
+            return orig(self, after_seq)
+
+        monkeypatch.setattr(EventLog, "replay", counted)
+        cp2 = ControlPlane(d, n_nodes=4, fsync=False).start()
+        assert len(calls) == 1, "boot must parse the log exactly once"
+        assert cp2.state_digest() == dig
+        cp2.close()
     finally:
         shutil.rmtree(d)
 
